@@ -1,0 +1,45 @@
+"""Shared benchmark utilities: timing, data generators (paper Sec. V-A)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+
+def timeit(fn, *args, reps=5, warmup=2):
+    """Median wall time (s) of jit'd fn; blocks on results."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def paper_datasets(rng, n):
+    """The nine distributions of the paper's Sec. V-A."""
+    half = lambda m: np.abs(rng.standard_normal(m))
+    mix = lambda a, b, fr: np.concatenate([a[: int(n * fr)],
+                                           b[: n - int(n * fr)]])
+    return {
+        "uniform": rng.random(n),
+        "normal": rng.standard_normal(n),
+        "halfnormal": half(n),
+        "beta25": rng.beta(2, 5, n),
+        "mix1": mix(rng.standard_normal(n), rng.normal(100, 1, n), 2 / 3),
+        "mix2": mix(rng.standard_normal(n) + 1, rng.normal(100, 1, n), .5),
+        "mix3": mix(half(n), np.full(n, 10.0), 0.9),
+        "mix4": mix(half(n), rng.normal(100, 1, n), 2 / 3),
+        "mix5": mix(half(n) + 1, rng.normal(100, 1, n), 0.5),
+    }
+
+
+def emit(rows):
+    """Print ``name,us_per_call,derived`` CSV rows."""
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")

@@ -1,0 +1,41 @@
+"""Paper Sec. V-C: CP behaviour across the nine data distributions.
+
+The paper reports <5% spread of CP runtime across distributions; the
+hardware-independent equivalent is the iteration count and pivot-interval
+size, which we tabulate here.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, paper_datasets, timeit
+from repro.core import selection
+
+
+def run(full: bool = False):
+    n = (1 << 21) if full else (1 << 17)
+    rng = np.random.default_rng(1)
+    rows = []
+    iters = []
+    for name, x in paper_datasets(rng, n).items():
+        x = x.astype(np.float32)
+        rng.shuffle(x)
+        xj = jnp.asarray(x)
+        t = timeit(lambda v: selection.median(v).value, xj, reps=3)
+        res = selection.median(xj)
+        k = (n + 1) // 2
+        assert np.float32(res.value) == np.partition(x, k - 1)[k - 1], name
+        iters.append(int(res.iters))
+        rows.append((f"cp_median/{name}/n={n}", t * 1e6,
+                     f"iters={int(res.iters)};z={int(res.n_in)}"))
+    spread = (max(iters) - min(iters))
+    rows.append((f"cp_median/iter_spread/n={n}", 0.0,
+                 f"min={min(iters)};max={max(iters)};spread={spread}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(full=True)

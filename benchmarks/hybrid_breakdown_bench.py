@@ -1,0 +1,43 @@
+"""Paper Sec. IV end / Table I breakdown: CP iterations vs pivot-interval
+size trade-off.  The paper stops CP after ~7 iterations when sorting the
+remaining z (<2^19 of n=2^25) is already fast; we sweep the iteration budget
+and report the pivot-interval size |z| and total time, locating the optimal
+handoff point for this platform.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import selection
+
+
+def run(full: bool = False):
+    n = (1 << 22) if full else (1 << 18)
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal(n).astype(np.float32)
+    xj = jnp.asarray(x)
+    k = (n + 1) // 2
+    want = np.partition(x, k - 1)[k - 1]
+    rows = []
+    # cap IS the handoff knob: the CP loop stops as soon as the counted
+    # pivot interval fits the capacity, then compacts + sorts it.
+    for cap_exp in [8, 10, 12, 14, 16, 18]:
+        cap = 1 << cap_exp
+        fn = jax.jit(lambda v, c=cap: selection.order_statistic(
+            v, k, maxit=64, cap=c).value)
+        t = timeit(fn, xj, reps=3)
+        res = selection.order_statistic(xj, k, maxit=64, cap=cap)
+        exact = np.float32(res.value) == want
+        rows.append((f"hybrid/cap=2^{cap_exp}/n={n}", t * 1e6,
+                     f"iters={int(res.iters)};z={int(res.n_in)};"
+                     f"frac={int(res.n_in)/n:.4f};exact={exact}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(full=True)

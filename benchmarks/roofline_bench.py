@@ -1,0 +1,52 @@
+"""Roofline table from the cached dry-run artifacts (experiments/dryrun).
+
+This is the source for EXPERIMENTS.md §Roofline.  Run the dry-runs first:
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "dryrun")
+
+
+def load_cells(tag=""):
+    cells = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        base = os.path.basename(p)[:-5]
+        parts = base.split("__")
+        cell_tag = parts[3] if len(parts) > 3 else ""
+        if cell_tag != tag:
+            continue
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run(full: bool = False):
+    rows = []
+    for c in load_cells():
+        if c.get("skipped"):
+            continue
+        r = c["roofline"]
+        name = f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}"
+        rows.append((
+            name, r[r["dominant"] + "_s"] * 1e6,
+            f"dom={r['dominant']};c={r['compute_s']*1e3:.2f}ms;"
+            f"m={r['memory_s']*1e3:.2f}ms;coll={r['collective_s']*1e3:.2f}ms;"
+            f"useful={c['useful_flops_ratio']:.3f};"
+            f"hbm={c['peak_hbm_bytes']/2**30:.1f}GiB"))
+    if not rows:
+        rows.append(("roofline/no_dryrun_artifacts", 0.0,
+                     "run repro.launch.dryrun first"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Benchmark harness entry point — one bench per paper table/figure.
+
+  selection_bench      Tables I/II (method x size x dtype)
+  distribution_bench   Sec. V-C (nine distributions)
+  outlier_bench        Sec. V-D / Fig. 5 (extreme values)
+  hybrid_breakdown     Sec. IV (CP iterations vs pivot-interval handoff)
+  regression_bench     Sec. VI (LMS/LTS/kNN)
+  roofline_bench       EXPERIMENTS.md §Roofline source (from dry-run cache)
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses paper-scale sizes.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale array sizes (slow on CPU)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    # f64 columns of Table II need x64 (benchmarks run in their own process;
+    # tests and smoke runs keep the default f32)
+    import jax
+    jax.config.update("jax_enable_x64", True)
+
+    from benchmarks import (
+        clip_bench,
+        distribution_bench,
+        hybrid_breakdown_bench,
+        outlier_bench,
+        regression_bench,
+        roofline_bench,
+        selection_bench,
+    )
+
+    benches = {
+        "selection": selection_bench,
+        "distribution": distribution_bench,
+        "outlier": outlier_bench,
+        "hybrid": hybrid_breakdown_bench,
+        "regression": regression_bench,
+        "clip": clip_bench,
+        "roofline": roofline_bench,
+    }
+    failed = []
+    for name, mod in benches.items():
+        if args.only and name != args.only:
+            continue
+        print(f"\n### bench: {name}")
+        try:
+            mod.run(full=args.full)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"\nFAILED benches: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Paper Tables I & II analogue: median time per method x array size.
+
+Columns in the paper: radix sort, quickselect CPU, quickselect GPU, cutting
+plane (+ stage breakdown), bisection, Brent x2.  Mapping here:
+
+  sort          -> jnp/XLA sort (the platform's fastest sort = radix analog)
+  numpy_select  -> np.partition (the "quickselect on CPU" row)
+  cp            -> cutting plane + count-bounded hybrid finalize (ours)
+  bisection / golden / brent -> the paper's baseline minimizers
+
+Wall times on this container are CPU times (indicative); the
+hardware-independent columns are the iteration counts and the pivot-interval
+size, which transfer directly to TPU (each iteration = one fused reduction).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import selection
+
+
+def run(full: bool = False):
+    sizes = [1 << 13, 1 << 15, 1 << 17, 1 << 19]
+    if full:
+        sizes += [1 << 21, 1 << 23, 1 << 25]
+    rng = np.random.default_rng(0)
+    rows = []
+    for dtype, dname in [(np.float32, "f32"), (np.float64, "f64")]:
+        for n in sizes:
+            x = rng.standard_normal(n).astype(dtype)
+            xj = jnp.asarray(x)
+            k = (n + 1) // 2
+            want = np.partition(x, k - 1)[k - 1]
+
+            # numpy partition = "quickselect on CPU" baseline
+            t = timeit(lambda: np.partition(x, k - 1)[k - 1], reps=3)
+            rows.append((f"numpy_select/{dname}/n={n}", t * 1e6,
+                         f"{n / t / 1e6:.1f}Melem/s"))
+
+            for method in ["sort", "cp", "bisection", "brent"]:
+                fn = jax.jit(
+                    lambda v, m=method: selection.order_statistic(
+                        v, k, method=m, maxit=256).value)
+                t = timeit(fn, xj, reps=3)
+                got = np.asarray(fn(xj))
+                assert got == dtype(want), (method, n, got, want)
+                res = selection.order_statistic(xj, k, method=method,
+                                                maxit=256)
+                rows.append((
+                    f"{method}/{dname}/n={n}", t * 1e6,
+                    f"iters={int(res.iters)};z={int(res.n_in)};"
+                    f"{n / t / 1e6:.1f}Melem/s"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(full=True)

@@ -1,0 +1,47 @@
+"""Paper Sec. VI: high-breakdown regression demo (LS vs LMS vs LTS).
+
+30% of responses are contaminated; ordinary least squares collapses while
+the selection-based LMS/LTS estimators recover the true coefficients.
+
+  PYTHONPATH=src python examples/robust_regression.py
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import robust
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n, p = 2000, 5
+    X = rng.standard_normal((n, p)).astype(np.float32)
+    X[:, -1] = 1.0
+    theta_true = np.array([2.0, -1.0, 0.5, 3.0, -0.7], np.float32)
+    y = X @ theta_true + 0.05 * rng.standard_normal(n).astype(np.float32)
+    out_idx = rng.choice(n, int(0.3 * n), replace=False)
+    y[out_idx] += 300 + 100 * rng.random(len(out_idx)).astype(np.float32)
+
+    Xj, yj = jnp.asarray(X), jnp.asarray(y)
+    theta_ls = np.linalg.lstsq(X, y, rcond=None)[0]
+    lts = robust.lts_fit(jax.random.PRNGKey(0), Xj, yj, n_starts=128)
+    lms = robust.lms_fit(jax.random.PRNGKey(1), Xj, yj, n_starts=512)
+
+    print(f"{'':12s} {'true':>8s} {'LS':>9s} {'LMS':>9s} {'LTS':>9s}")
+    for i in range(p):
+        print(f"theta[{i}]     {theta_true[i]:8.3f} {theta_ls[i]:9.3f} "
+              f"{float(lms.theta[i]):9.3f} {float(lts.theta[i]):9.3f}")
+    for name, th in [("LS", theta_ls), ("LMS", np.asarray(lms.theta)),
+                     ("LTS", np.asarray(lts.theta))]:
+        print(f"||err|| {name}: {np.linalg.norm(th - theta_true):.4f}")
+
+    w = np.asarray(lts.inlier_weights)
+    flagged = np.where(w == 0)[0]
+    hit = len(set(flagged) & set(out_idx)) / len(out_idx)
+    print(f"LTS flagged {len(flagged)} outliers; "
+          f"recall of true outliers: {hit:.1%}")
+
+
+if __name__ == "__main__":
+    main()

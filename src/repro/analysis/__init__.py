@@ -1,0 +1,2 @@
+from repro.analysis.roofline import analyze_compiled, roofline_terms
+from repro.analysis.params import param_counts

@@ -1,0 +1,26 @@
+"""Analytic parameter counts (total + MoE-active) from the param shapes."""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ModelConfig
+
+
+def param_counts(params_shapes, cfg: ModelConfig):
+    """(total_params, active_params). Active scales MoE expert tensors by
+    top_k / num_experts (the dense-equivalent compute size)."""
+    total = 0
+    active = 0
+    flat = jax.tree_util.tree_flatten_with_path(params_shapes)[0]
+    for path, leaf in flat:
+        names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if (cfg.moe is not None and "ffn" in names
+                and names[-1] in ("w_gate", "w_in", "w_out")
+                and leaf.ndim >= 3):
+            n = int(n * cfg.moe.top_k / cfg.moe.num_experts)
+        active += n
+    return total, active

@@ -1,0 +1,341 @@
+"""Roofline terms from a compiled (dry-run) artifact.
+
+TPU v5e hardware constants (the TARGET; this container is CPU-only so terms
+are *derived*, not measured):
+
+    peak bf16 compute : 197 TFLOP/s per chip
+    HBM bandwidth     : 819 GB/s per chip
+    ICI link bandwidth: ~50 GB/s per link
+
+Terms (per device; the compiled module is already the per-partition
+program under SPMD):
+
+    compute    = HLO_FLOPs / peak
+    memory     = HLO_bytes_accessed / HBM_bw
+    collective = sum over collective ops of (algorithm bytes) / link_bw
+
+collective bytes are NOT in cost_analysis: we parse the compiled HLO and sum
+operand bytes with ring-algorithm factors (all-reduce 2x, all-gather /
+reduce-scatter / all-to-all / collective-permute 1x) — the standard
+bytes-on-the-wire approximation.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+# result-shape factors for ring algorithms (bytes on the wire per device)
+_COLL_FACTORS = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"=\s*\S+\s+while\(.*?condition=\s*%?([\w.\-]+)\s*,\s*body=\s*%?([\w.\-]+)")
+_CALLS_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|branch_computations)="
+    r"\s*({[^}]*}|%?[\w.\-]+)")
+_TRIP_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo_text: str):
+    """HLO text -> {comp_name: [lines]} (+ entry name).
+
+    Computation headers are non-indented lines ``[ENTRY ]%name (params) ->
+    type {``; params may contain nested parens (tuple types), so only the
+    leading ``%name (`` is parsed.
+    """
+    comps: Dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        s = line.rstrip()
+        if (not line[:1].isspace()) and s.endswith("{") and "->" in s:
+            m = _COMP_RE.match(s.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if s.strip().startswith("ENTRY"):
+                    entry = cur
+                continue
+        if s.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    return comps, entry
+
+
+def _trip_count(cond_lines) -> int:
+    """Best-effort trip count from a while condition: the largest constant
+    in a comparison (XLA canonical counted loops compare counter < N)."""
+    best = 1
+    for line in cond_lines:
+        if "compare" in line or "constant" in line:
+            for m in _TRIP_RE.finditer(line):
+                best = max(best, int(m.group(1)))
+    return best
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s+"
+                     r"([a-z][\w\-]*)\(")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_TRIPCFG_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_WHILE_REF_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLED_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+_ELEMWISE_SKIP = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "while", "iota", "copy-start", "copy-done",
+}
+_COLL_KINDS = set(_COLL_FACTORS)
+
+
+def _dims(shape_str: str):
+    out = []
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt in _DTYPE_BYTES:
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            out.append((dt, n))
+    return out
+
+
+def hlo_cost(hlo_text: str) -> Dict:
+    """Trip-count-aware cost model of compiled (per-partition) HLO.
+
+    jax's ``cost_analysis`` counts while (scan) bodies ONCE; layer stacks
+    here are scans, so we walk the computation graph from ENTRY, weighting
+    each op by the product of enclosing-while trip counts (XLA emits
+    ``known_trip_count`` in backend_config):
+
+      * flops: exact for dots (2*prod(result)*prod(lhs contracting dims),
+        lhs shape resolved via a module-wide def-site shape map) + a
+        1-flop/element proxy for other top-level ops;
+      * bytes: result + operand bytes of top-level ops (post-fusion text, so
+        fusion internals don't double count);
+      * collectives: wire bytes, max(result, operands) x ring factor
+        (all-reduce 2x, others 1x).
+    """
+    comps, entry = _split_computations(hlo_text)
+    # def-site shape map (per computation, with module-wide fallback)
+    shapes: Dict[str, str] = {}
+    cshape: Dict[str, Dict[str, str]] = {}
+    for cname, lines in comps.items():
+        local = {}
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if m:
+                local[m.group(1)] = m.group(2)
+                shapes.setdefault(m.group(1), m.group(2))
+        cshape[cname] = local
+
+    def shape_of(comp, name):
+        return cshape.get(comp, {}).get(name) or shapes.get(name, "")
+
+    coll: Dict[str, float] = {k: 0.0 for k in _COLL_FACTORS}
+    coll_counts: Dict[str, float] = {k: 0.0 for k in _COLL_FACTORS}
+    totals = {"flops_dot": 0.0, "flops_proxy": 0.0, "bytes": 0.0}
+    stack = []
+
+    def operand_names(line):
+        # first (...) group after the opcode
+        m = _DEF_RE.match(line)
+        if not m:
+            return []
+        rest = line[m.end() - 1:]
+        om = _OPERANDS_RE.search(rest)
+        if not om:
+            return []
+        return _OPERAND_NAME_RE.findall(om.group(1))
+
+    def walk(comp: str, weight: float, inside_fusion: bool):
+        if comp not in comps or comp in stack or weight <= 0:
+            return
+        stack.append(comp)
+        for line in comps[comp]:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            res_shape, op = m.group(2), m.group(3)
+            base = op.replace("-start", "").replace("-done", "")
+
+            if base == "while":
+                tm = _TRIPCFG_RE.search(line)
+                trip = int(tm.group(1)) if tm else None
+                wm = _WHILE_REF_RE.search(line)
+                if wm:
+                    cond, body = wm.group(1), wm.group(2)
+                    if trip is None:
+                        trip = _trip_count(comps.get(cond, []))
+                    walk(body, weight * trip, inside_fusion)
+                continue
+
+            if base in _COLL_KINDS:
+                if op.endswith("-done"):
+                    continue
+                b = _shape_bytes(res_shape)
+                for o in operand_names(line):
+                    b = max(b, _shape_bytes(shape_of(comp, o)))
+                coll[base] += b * _COLL_FACTORS[base] * weight
+                coll_counts[base] += weight
+                continue
+
+            if base == "dot":
+                ops = operand_names(line)
+                cm = _CONTRACT_RE.search(line)
+                if ops and cm:
+                    lhs = shape_of(comp, ops[0])
+                    lhs_dims = []
+                    sm = _SHAPE_RE.search(lhs)
+                    if sm:
+                        lhs_dims = [int(d) for d in sm.group(2).split(",")
+                                    if d]
+                    contract = 1
+                    for i in cm.group(1).split(","):
+                        if i != "" and int(i) < len(lhs_dims):
+                            contract *= lhs_dims[int(i)]
+                    out_elems = sum(n for _, n in _dims(res_shape))
+                    totals["flops_dot"] += 2.0 * out_elems * contract * weight
+                if not inside_fusion:
+                    b = _shape_bytes(res_shape)
+                    for o in operand_names(line):
+                        b += _shape_bytes(shape_of(comp, o))
+                    totals["bytes"] += b * weight
+                continue
+
+            called = _CALLED_RE.search(line)
+            if base in ("fusion", "call", "custom-call", "map", "reduce",
+                        "sort", "scatter", "reduce-window", "select-and-scatter"):
+                if called:
+                    walk(called.group(1), weight,
+                         inside_fusion or base == "fusion")
+            bm = _BRANCHES_RE.search(line)
+            if bm:
+                for br in _OPERAND_NAME_RE.findall(bm.group(1)):
+                    walk(br, weight, inside_fusion)
+
+            if inside_fusion:
+                # only dots counted inside fusion bodies (handled above)
+                continue
+            if base in _ELEMWISE_SKIP:
+                continue
+            # generic top-level op: bytes = result + operands; proxy flops
+            b = _shape_bytes(res_shape)
+            elems = sum(n for _, n in _dims(res_shape))
+            for o in operand_names(line):
+                b += _shape_bytes(shape_of(comp, o))
+            totals["bytes"] += b * weight
+            totals["flops_proxy"] += elems * weight
+        stack.pop()
+
+    if entry is not None:
+        walk(entry, 1.0, False)
+    else:
+        for name in comps:
+            walk(name, 1.0, False)
+    return {
+        "flops": totals["flops_dot"] + totals["flops_proxy"],
+        "flops_dot": totals["flops_dot"],
+        "bytes": totals["bytes"],
+        "collectives": coll,
+        "collective_counts": coll_counts,
+    }
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Back-compat wrapper: trip-aware collective bytes."""
+    cost = hlo_cost(hlo_text)
+    out = dict(cost["collectives"])
+    out["_counts"] = cost["collective_counts"]  # type: ignore
+    return out
+
+
+def analyze_compiled(compiled, *, n_devices: int) -> Dict:
+    """Extract the analysis numbers from a compiled executable.
+
+    The primary flops/bytes come from the trip-count-aware HLO walk
+    (``hlo_cost``): jax's ``cost_analysis`` counts while (scan) bodies once,
+    which undercounts scanned layer stacks by the trip factor.  The raw
+    cost_analysis values are kept as ``*_raw`` for reference.
+    """
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    text = compiled.as_text()
+    walk = hlo_cost(text)
+    coll_total = sum(walk["collectives"].values())
+    return {
+        "flops_per_device": float(walk["flops"]),
+        "flops_dot_per_device": float(walk["flops_dot"]),
+        "bytes_per_device": float(walk["bytes"]),
+        "flops_per_device_raw": float(cost.get("flops", 0.0)),
+        "bytes_per_device_raw": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes_per_device": float(coll_total),
+        "collective_breakdown": dict(walk["collectives"]),
+        "collective_counts": walk["collective_counts"],
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "peak_hbm_bytes": int(mem.argument_size_in_bytes
+                              + mem.output_size_in_bytes
+                              + mem.temp_size_in_bytes),
+        "n_devices": n_devices,
+    }
+
+
+def roofline_terms(analysis: Dict) -> Dict:
+    """The three roofline terms in seconds + dominant bottleneck."""
+    t_compute = analysis["flops_per_device"] / PEAK_FLOPS
+    t_memory = analysis["bytes_per_device"] / HBM_BW
+    t_coll = analysis["collective_bytes_per_device"] / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total = max(sum(terms.values()), 1e-30)
+    return {
+        **terms,
+        "dominant": dom.replace("_s", ""),
+        # fraction of the step that the dominant term represents if perfectly
+        # overlapped (roofline fraction = bound / sum when nothing overlaps)
+        "roofline_fraction": bound / total,
+    }

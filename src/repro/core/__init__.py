@@ -1,0 +1,20 @@
+"""Core: selection-by-convex-minimization (Beliakov 2011) + robust stats."""
+from repro.core.objective import FG, eval_fg, eval_partials, fg_from_partials, os_weights
+from repro.core.selection import (
+    EXACT_HIT,
+    HYBRID_SORT,
+    METHODS,
+    NOT_CONVERGED,
+    SelectResult,
+    TIE_FALLBACK,
+    median,
+    order_statistic,
+    quantile,
+    topk_threshold,
+)
+
+__all__ = [
+    "FG", "eval_fg", "eval_partials", "fg_from_partials", "os_weights",
+    "SelectResult", "order_statistic", "median", "quantile", "topk_threshold",
+    "METHODS", "EXACT_HIT", "HYBRID_SORT", "TIE_FALLBACK", "NOT_CONVERGED",
+]

@@ -1,0 +1,355 @@
+"""Selection (k-th order statistic) by convex minimization — Beliakov (2011).
+
+Implements the paper's method set on a single shared skeleton:
+
+* ``cp``        — Kelley's cutting-plane method (Algorithm 1 of the paper).
+* ``bisection`` — classical bisection on the subgradient sign (paper Sec. III).
+* ``golden``    — golden-section-style bracket shrink (paper baseline).
+* ``brent``     — parabolic fit with bisection safeguard (paper baseline).
+* ``sort``      — full ``jnp.sort`` (the paper's "GPU radix sort" baseline).
+
+All iterative methods run the same ``lax.while_loop``; they differ only in the
+*proposal* of the next pivot.  Each iteration costs exactly one fused pass
+over the data (``objective.eval_partials``) — the paper's
+``maxit + O(1)`` parallel reductions.
+
+Exactness: unlike the paper (which stops on a float tolerance and then scans
+for the largest ``x_i <= y~``), we carry the counts ``n_lt / n_le`` through
+the loop, which yields
+
+  1. an *exact-hit* certificate ``n_lt < k <= n_le  =>  pivot == x_(k)``;
+  2. a count-based stopping rule ``count(y_L < x <= y_R) <= cap`` that turns
+     the paper's dynamic-size ``copy_if`` into a *static-shape* fixed-capacity
+     compaction (required for ``jit``);
+  3. a tie-safe fallback: if more than ``cap`` duplicates of ``x_(k)`` exist,
+     the next distinct value above ``y_L`` is verified by one extra counting
+     pass.
+
+Invariants maintained by the loop (proved by the subdifferential signs, see
+``objective.py``):   count(x <= y_L) < k <= count(x <= y_R).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.objective import FG, eval_fg, fg_from_partials, os_weights
+from repro.core import transforms
+
+METHODS = ("cp", "cp_hybrid", "bisection", "golden", "brent", "sort")
+
+# Status codes for SelectResult.status
+EXACT_HIT = 0       # pivot certified equal to x_(k) during iterations
+HYBRID_SORT = 1     # answer from compact+sort of the pivot interval
+TIE_FALLBACK = 2    # answer = next distinct value, certified by counts
+NOT_CONVERGED = 3   # approximate answer (bracket right end)
+
+
+class SelectResult(NamedTuple):
+    value: jax.Array        # the order statistic (exact unless status==3)
+    iters: jax.Array        # number of f/g evaluations inside the loop
+    status: jax.Array       # see codes above
+    y_lo: jax.Array         # final bracket
+    y_hi: jax.Array
+    n_in: jax.Array         # count(y_lo < x <= y_hi) at exit
+
+
+class _LoopState(NamedTuple):
+    yL: jax.Array
+    fL: jax.Array
+    gL: jax.Array   # right one-sided derivative at yL (< 0)
+    yR: jax.Array
+    fR: jax.Array
+    gR: jax.Array   # left one-sided derivative at yR (> 0)
+    cleL: jax.Array  # lower bound on count(x <= yL)  (exact after 1st move)
+    cleR: jax.Array  # exact count(x <= yR)
+    t_exact: jax.Array
+    found_exact: jax.Array
+    it: jax.Array
+    # golden/brent bookkeeping: previous probe (for parabolic fit)
+    tp: jax.Array
+    fp: jax.Array
+
+
+def _propose_cp(s: _LoopState, n, k):
+    """Kelley cut intersection: minimizer of max of the two support lines."""
+    return (s.fR - s.fL + s.yL * s.gL - s.yR * s.gR) / (s.gL - s.gR)
+
+
+def _propose_bisection(s: _LoopState, n, k):
+    return 0.5 * (s.yL + s.yR)
+
+
+_INV_GOLDEN = 0.381966011250105  # 2 - golden ratio
+
+
+def _propose_golden(s: _LoopState, n, k):
+    # Shrink from the side whose objective value is larger (descent side).
+    left = s.fL > s.fR
+    w = jnp.where(left, _INV_GOLDEN, 1.0 - _INV_GOLDEN)
+    return s.yL + w * (s.yR - s.yL)
+
+
+def _propose_brent(s: _LoopState, n, k):
+    """Parabola through (yL,fL), (tp,fp), (yR,fR); midpoint safeguard."""
+    x1, f1, x2, f2, x3, f3 = s.yL, s.fL, s.tp, s.fp, s.yR, s.fR
+    num = (x2 - x1) ** 2 * (f2 - f3) - (x2 - x3) ** 2 * (f2 - f1)
+    den = (x2 - x1) * (f2 - f3) - (x2 - x3) * (f2 - f1)
+    ok = jnp.abs(den) > 1e-30
+    t = x2 - 0.5 * num / jnp.where(ok, den, 1.0)
+    mid = 0.5 * (s.yL + s.yR)
+    inside = (t > s.yL) & (t < s.yR)
+    return jnp.where(ok & inside, t, mid)
+
+
+_PROPOSALS = {
+    "cp": _propose_cp,
+    "cp_hybrid": _propose_cp,
+    "bisection": _propose_bisection,
+    "golden": _propose_golden,
+    "brent": _propose_brent,
+}
+
+
+def _bracket_loop(x, k, *, method, maxit, cap, eval_fn=None):
+    """Run the shared bracket-shrinking loop; returns final _LoopState."""
+    n = x.size
+    dtype = x.dtype
+    propose = _PROPOSALS[method]
+    if eval_fn is None:
+        eval_fn = lambda t: eval_fg(x, t, k)
+
+    xmin = jnp.min(x)
+    xmax = jnp.max(x)
+    xmean = jnp.mean(x, dtype=dtype)
+    alpha, beta = os_weights(n, k, dtype)
+    nf = jnp.asarray(n, dtype)
+    # Analytic init at the extremes (paper: single fused reduction).  The
+    # slopes use the conservative tie count 1, which keeps the support lines
+    # *lower* bounds (valid cuts) even with duplicated extremes.
+    fL0 = beta * (xmean - xmin)
+    fR0 = alpha * (xmax - xmean)
+    gL0 = alpha * (1.0 / nf) - beta * (nf - 1.0) / nf
+    gR0 = alpha * (nf - 1.0) / nf - beta * (1.0 / nf)
+
+    kk = jnp.asarray(k, jnp.int32)
+    s0 = _LoopState(
+        yL=xmin, fL=fL0, gL=gL0,
+        yR=xmax, fR=fR0, gR=gR0,
+        cleL=jnp.asarray(1, jnp.int32),  # count(x<=min) >= 1 (conservative)
+        cleR=jnp.asarray(n, jnp.int32),
+        t_exact=jnp.asarray(jnp.nan, dtype),
+        found_exact=jnp.asarray(False),
+        it=jnp.asarray(0, jnp.int32),
+        tp=0.5 * (xmin + xmax), fp=jnp.maximum(fL0, fR0),
+    )
+
+    def cond(s: _LoopState):
+        return (
+            (~s.found_exact)
+            & (s.cleR - s.cleL > cap)
+            & (s.it < maxit)
+            & (s.yR > s.yL)
+        )
+
+    def body(s: _LoopState):
+        t = propose(s, n, k)
+        # numerical safeguard: keep strictly inside the open bracket
+        bad = ~jnp.isfinite(t) | (t <= s.yL) | (t >= s.yR)
+        t = jnp.where(bad, 0.5 * (s.yL + s.yR), t).astype(dtype)
+        fg: FG = eval_fn(t)
+        exact = (fg.n_lt < kk) & (kk <= fg.n_le)
+        move_left = fg.g_hi < 0  # t strictly left of the minimizer set
+        # if neither exact nor move_left then g_lo > 0 -> t strictly right.
+        new = _LoopState(
+            yL=jnp.where(move_left, t, s.yL),
+            fL=jnp.where(move_left, fg.f, s.fL),
+            gL=jnp.where(move_left, fg.g_hi, s.gL),
+            yR=jnp.where(move_left | exact, s.yR, t),
+            fR=jnp.where(move_left | exact, s.fR, fg.f),
+            gR=jnp.where(move_left | exact, s.gR, fg.g_lo),
+            cleL=jnp.where(move_left, fg.n_le, s.cleL),
+            cleR=jnp.where(move_left | exact, s.cleR, fg.n_le),
+            t_exact=jnp.where(exact, t, s.t_exact),
+            found_exact=s.found_exact | exact,
+            it=s.it + 1,
+            tp=t, fp=fg.f,
+        )
+        return new
+
+    return jax.lax.while_loop(cond, body, s0), xmin, xmax
+
+
+def _finalize(x, k, s: _LoopState, cap, xmin, xmax):
+    """Exact recovery from the final bracket.  Two fused passes.
+
+    Pass 1 (the paper's ``copy_if`` + count): compact elements of the open
+    pivot interval into a fixed ``cap`` buffer, count ``c_L = count(x<=y_L)``
+    and find the next distinct value above ``y_L``.
+    Pass 2 (tie fallback verification): ``count(x <= vnext)``.
+    """
+    n = x.size
+    kk = jnp.asarray(k, jnp.int32)
+    x = x.reshape(-1)
+
+    mask_in = (x > s.yL) & (x <= s.yR)
+    cL = jnp.sum(x <= s.yL, dtype=jnp.int32)
+    n_in = jnp.sum(mask_in, dtype=jnp.int32)
+    # fixed-capacity compaction; slot `cap` is the overflow trash slot
+    pos = jnp.cumsum(mask_in.astype(jnp.int32)) - 1
+    idx = jnp.where(mask_in, jnp.minimum(pos, cap), cap)
+    big = jnp.asarray(jnp.inf, x.dtype)
+    z = jnp.full((cap + 1,), big, x.dtype).at[idx].set(jnp.where(mask_in, x, big))
+    zs = jax.lax.sort(z[:cap])
+    ans_sort = zs[jnp.clip(kk - cL - 1, 0, cap - 1)]
+
+    vnext = jnp.min(jnp.where(x > s.yL, x, big))
+    n_le_v = jnp.sum(x <= vnext, dtype=jnp.int32)
+    fallback_ok = (cL < kk) & (kk <= n_le_v)
+
+    value = jnp.where(
+        s.found_exact,
+        s.t_exact,
+        jnp.where(n_in <= cap, ans_sort, jnp.where(fallback_ok, vnext, s.yR)),
+    )
+    status = jnp.where(
+        s.found_exact,
+        EXACT_HIT,
+        jnp.where(
+            n_in <= cap,
+            HYBRID_SORT,
+            jnp.where(fallback_ok, TIE_FALLBACK, NOT_CONVERGED),
+        ),
+    )
+    # Extreme-tie shortcuts (the bracket invariant c(y_L) < k only holds for
+    # answers strictly inside the data range): if count(x <= y_L) >= k the
+    # answer is at or below y_L, which can only be x_(1)=min (y_L starts at
+    # the min and only moves to points certified count(x<=t) < k).  Symmetric
+    # test at the max.  Also covers k==1, k==n and all-equal arrays.
+    n_lt_max = jnp.sum(x < xmax, dtype=jnp.int32)
+    at_min = cL >= kk
+    at_max = n_lt_max < kk
+    value = jnp.where(at_min, xmin, jnp.where(at_max, xmax, value))
+    status = jnp.where(at_min | at_max, EXACT_HIT, status)
+    return SelectResult(
+        value=value, iters=s.it, status=status.astype(jnp.int32),
+        y_lo=s.yL, y_hi=s.yR, n_in=n_in,
+    )
+
+
+def _default_cap(n: int) -> int:
+    # generous: >= 2 * sqrt-ish growth, bounded; paper observed |z| ~ 1-5% n.
+    return int(min(max(4096, n // 64), 1 << 19))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("method", "maxit", "cap", "transform")
+)
+def order_statistic(
+    x: jax.Array,
+    k,
+    *,
+    method: str = "cp",
+    maxit: int = 64,
+    cap: Optional[int] = None,
+    transform: Optional[str] = None,
+) -> SelectResult:
+    """k-th smallest element of ``x`` (k is 1-indexed, may be traced).
+
+    ``method`` in {"cp", "cp_hybrid", "bisection", "golden", "brent", "sort"}.
+    ``cp`` and ``cp_hybrid`` are aliases (the hybrid finalize is always on —
+    it is what makes the result exact).  ``transform='log1p'`` applies the
+    paper's monotone guard for extreme-valued data (Sec. V-D).
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}; one of {METHODS}")
+    x = x.reshape(-1)
+    n = x.size
+    if cap is None:
+        cap = _default_cap(n)
+    cap = min(cap, n)
+    k = jnp.clip(jnp.asarray(k, jnp.int32), 1, n)
+
+    if method == "sort":
+        xs = jax.lax.sort(x)
+        value = xs[k - 1]
+        zero = jnp.asarray(0, jnp.int32)
+        return SelectResult(
+            value=value, iters=zero, status=jnp.asarray(EXACT_HIT, jnp.int32),
+            y_lo=xs[0], y_hi=xs[-1], n_in=jnp.asarray(n, jnp.int32),
+        )
+
+    if transform == "log1p":
+        xt, inv = transforms.log1p_transform(x)
+        s, tmin, tmax = _bracket_loop(xt, k, method=method, maxit=maxit, cap=cap)
+        # Map the bracket back *data-consistently*: F is monotone
+        # non-decreasing in fp on the data, so
+        #   y_orig = max{x_i : F(x_i) <= y_t}
+        # preserves counts exactly: count(x <= y_orig) == count(F(x) <= y_t).
+        # Both loop invariants (c(y_L) < k <= c(y_R)) therefore transfer to
+        # the original domain, and the finalize stays exact.  On an exact hit
+        # the t-space image may merge several distinct originals (F is not
+        # injective in fp): collapse the bracket to the image's preimage set
+        # and let the original-space finalize resolve it.
+        neg = jnp.asarray(-jnp.inf, x.dtype)
+        yL_t = jnp.where(s.found_exact, s.t_exact, s.yL)
+        yR_t = jnp.where(s.found_exact, s.t_exact, s.yR)
+        yL = jnp.where(
+            s.found_exact,
+            jnp.max(jnp.where(xt < yL_t, x, neg)),   # strict: preimage start
+            jnp.max(jnp.where(xt <= yL_t, x, neg)),
+        )
+        yR = jnp.max(jnp.where(xt <= yR_t, x, neg))
+        s = s._replace(
+            yL=yL, yR=yR,
+            t_exact=inv(s.t_exact),
+            # exactness certificates do not survive the fp roundtrip:
+            found_exact=jnp.asarray(False),
+        )
+        return _finalize(x, k, s, cap, jnp.min(x), jnp.max(x))
+    elif transform is not None:
+        raise ValueError(f"unknown transform {transform!r}")
+
+    s, xmin, xmax = _bracket_loop(x, k, method=method, maxit=maxit, cap=cap)
+    return _finalize(x, k, s, cap, xmin, xmax)
+
+
+def median(x: jax.Array, **kw) -> SelectResult:
+    """Med(x) = x_([(n+1)/2]) (paper Sec. I convention)."""
+    n = x.size
+    return order_statistic(x, (n + 1) // 2, **kw)
+
+
+def quantile(x: jax.Array, q, **kw) -> SelectResult:
+    """Lower empirical q-quantile: x_(ceil(q*n)) clipped to [1, n]."""
+    n = x.size
+    k = jnp.clip(jnp.ceil(jnp.asarray(q) * n).astype(jnp.int32), 1, n)
+    return order_statistic(x, k, **kw)
+
+
+def topk_threshold(x: jax.Array, m, **kw) -> SelectResult:
+    """Value of the m-th largest element (for kNN / trimming)."""
+    n = x.size
+    return order_statistic(x, n - jnp.asarray(m, jnp.int32) + 1, **kw)
+
+
+def multi_order_statistic(x: jax.Array, ks, **kw) -> SelectResult:
+    """Several order statistics of the SAME array at once (vmapped CP).
+
+    All brackets iterate together: each iteration evaluates every live
+    pivot against ``x`` in one batched pass (a single fused kernel launch on
+    TPU) instead of len(ks) independent selections — the cheap way to get
+    (p25, p50, p75, p99, ...) telemetry sets.
+    """
+    ks = jnp.asarray(ks, jnp.int32)
+    return jax.vmap(lambda k: order_statistic(x, k, **kw))(ks)
+
+
+def quantiles(x: jax.Array, qs, **kw) -> SelectResult:
+    """Lower empirical quantiles at each q in ``qs`` (one vmapped solve)."""
+    n = x.size
+    ks = jnp.clip(jnp.ceil(jnp.asarray(qs) * n).astype(jnp.int32), 1, n)
+    return multi_order_statistic(x, ks, **kw)

@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticPipeline, batch_for_shape

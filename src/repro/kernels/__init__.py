@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (the fused
+selection-objective transform-reduce), with jit'd dispatch wrappers and
+pure-jnp oracles.  Validated in interpret mode on CPU; see tests/test_kernels.py."""
+from repro.kernels import cp_objective, ops, ref

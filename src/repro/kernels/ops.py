@@ -1,0 +1,46 @@
+"""jit'd dispatch wrappers around the Pallas kernels.
+
+On TPU the Pallas path is used; on CPU (this container) the pure-jnp oracle
+is numerically identical and XLA fuses it into one pass, so it is the
+default.  ``backend='pallas_interpret'`` forces the kernel body through the
+Pallas interpreter (Python emulation) — used by the tests to validate the
+TPU kernel logic on CPU.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import cp_objective, ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def fused_partials(x, y, *, backend: str | None = None):
+    """(sum_pos, sum_neg, n_lt, n_le) for pivot y — kernel-accelerated."""
+    if backend is None:
+        backend = "pallas" if _on_tpu() else "jnp"
+    if backend == "pallas":
+        return cp_objective.cp_partials(x, y)
+    if backend == "pallas_interpret":
+        return cp_objective.cp_partials(x, y, interpret=True)
+    if backend == "jnp":
+        return ref.cp_partials_ref(x, y)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def fused_partials_batched(x, y, *, backend: str | None = None):
+    """Row-wise variant over (B, n) problems."""
+    if backend is None:
+        backend = "pallas" if _on_tpu() else "jnp"
+    if backend == "pallas":
+        return cp_objective.cp_partials_batched(x, y)
+    if backend == "pallas_interpret":
+        return cp_objective.cp_partials_batched(x, y, interpret=True)
+    if backend == "jnp":
+        return ref.cp_partials_batched_ref(x, y)
+    raise ValueError(f"unknown backend {backend!r}")

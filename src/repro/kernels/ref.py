@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cp_partials_ref(x: jax.Array, y: jax.Array):
+    """Oracle for kernels.cp_objective.cp_partials."""
+    x = x.reshape(-1).astype(jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    d = x - y
+    sum_pos = jnp.sum(jnp.maximum(d, 0))
+    sum_neg = jnp.sum(jnp.maximum(-d, 0))
+    n_lt = jnp.sum(d < 0, dtype=jnp.int32)
+    n_le = jnp.sum(d <= 0, dtype=jnp.int32)
+    return sum_pos, sum_neg, n_lt, n_le
+
+
+def cp_partials_batched_ref(x: jax.Array, y: jax.Array):
+    """Oracle for kernels.cp_objective.cp_partials_batched."""
+    return jax.vmap(cp_partials_ref)(
+        x.astype(jnp.float32), jnp.asarray(y, jnp.float32)
+    )

@@ -1,0 +1,135 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+Nothing here allocates device memory: params/opt/cache structures come from
+``jax.eval_shape`` and batches are ShapeDtypeStructs, so the 512-device
+dry-run lowers and compiles without touching HBM (there is none).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, ShardingPlan
+from repro.models import model
+from repro.optim import AdamW, Adafactor
+from repro.train.step import TrainState, train_state_specs
+
+PARAM_DTYPE = jnp.bfloat16
+CACHE_DTYPE = jnp.bfloat16
+
+
+def pick_optimizer(cfg: ModelConfig):
+    """Adafactor for the trillion-scale config, AdamW otherwise."""
+    if cfg.moe is not None and cfg.moe.num_experts >= 256:
+        return Adafactor()
+    return AdamW()
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one input batch (train/prefill)."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        return {
+            "audio": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    if cfg.frontend == "patch_stub":
+        n_img = min(cfg.n_frontend_tokens, S // 2)
+        return {
+            "patches": jax.ShapeDtypeStruct((B, n_img, cfg.d_model),
+                                            jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((B, S - n_img), jnp.int32),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def batch_shardings(bspecs, plan: ShardingPlan):
+    lead = plan.dp_axes if plan.dp_axes else None
+
+    def shard_one(s):
+        rest = [None] * (len(s.shape) - 1)
+        return NamedSharding(plan.mesh, P(lead, *rest))
+
+    return jax.tree.map(shard_one, bspecs)
+
+
+def params_shapes(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda k: model.init(k, cfg, dtype=PARAM_DTYPE),
+        jax.random.PRNGKey(0))
+
+
+def state_shapes(cfg: ModelConfig, optimizer):
+    pshapes = params_shapes(cfg)
+    oshapes = jax.eval_shape(optimizer.init, pshapes)
+    return TrainState(params=pshapes, opt=oshapes,
+                      step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def cache_shapes(cfg: ModelConfig, shape: ShapeConfig, plan: ShardingPlan):
+    return jax.eval_shape(
+        functools.partial(model.init_cache, cfg, shape.global_batch,
+                          shape.seq_len, plan, CACHE_DTYPE,
+                          enc_seq=shape.seq_len))
+
+
+def to_named(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def train_cell(cfg: ModelConfig, shape: ShapeConfig, plan: ShardingPlan,
+               clip: str = "quantile"):
+    """(arg ShapeDtypeStructs, in_shardings, out_shardings) for train_step."""
+    opt = pick_optimizer(cfg)
+    state = state_shapes(cfg, opt)
+    bspecs = batch_specs(cfg, shape)
+    sspecs = train_state_specs(state, cfg, plan)
+    in_sh = (to_named(sspecs, plan.mesh), batch_shardings(bspecs, plan))
+    rep = NamedSharding(plan.mesh, P())
+    keys = ["nll", "zloss", "loss"]
+    if clip.startswith("quantile"):
+        keys.append("clip_thr")
+    elif clip == "global_norm":
+        keys.append("grad_norm")
+    if cfg.moe is not None:
+        keys += ["moe_aux", "moe_z"]
+    metrics_sh = {k: rep for k in keys}
+    out_sh = (to_named(sspecs, plan.mesh), metrics_sh)
+    return opt, (state, bspecs), in_sh, out_sh
+
+
+def prefill_cell(cfg: ModelConfig, shape: ShapeConfig, plan: ShardingPlan):
+    pshapes = params_shapes(cfg)
+    pspec = model.param_specs(pshapes, cfg, plan)
+    bspecs = batch_specs(cfg, shape)
+    in_sh = (to_named(pspec, plan.mesh), batch_shardings(bspecs, plan))
+    lead = plan.dp_axes if plan.dp_axes else None
+    vtp = plan.tp_axis if cfg.vocab % max(plan.tp, 1) == 0 else None
+    out_sh = NamedSharding(plan.mesh, P(lead, None, vtp))
+    return (pshapes, bspecs), in_sh, out_sh
+
+
+def decode_cell(cfg: ModelConfig, shape: ShapeConfig, plan: ShardingPlan):
+    """serve_step(params, cache, token, index) specs/shardings."""
+    B = shape.global_batch
+    pshapes = params_shapes(cfg)
+    pspec = model.param_specs(pshapes, cfg, plan)
+    cshapes = cache_shapes(cfg, shape, plan)
+    cspec = model.cache_specs(cshapes, cfg, plan)
+    lead = plan.dp_axes if plan.dp_axes else None
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+    mesh = plan.mesh
+    in_sh = (to_named(pspec, mesh), to_named(cspec, mesh),
+             NamedSharding(mesh, P(lead, None)), NamedSharding(mesh, P()))
+    vtp = plan.tp_axis if cfg.vocab % max(plan.tp, 1) == 0 else None
+    out_sh = (NamedSharding(mesh, P(lead, None)),
+              NamedSharding(mesh, P(lead, None, vtp)),
+              to_named(cspec, mesh))
+    return (pshapes, cshapes, tok, idx), in_sh, out_sh

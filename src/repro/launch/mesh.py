@@ -1,0 +1,76 @@
+"""Production mesh + per-(arch,shape) sharding plans.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Single pod: (data=16, model=16) = 256 chips (TPU v5e
+pod slice); multi-pod: (pod=2, data=16, model=16) = 512 chips, with the pod
+axis acting as an outer data-parallel dimension (cross-pod traffic is
+gradient all-reduce only).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.configs.base import ModelConfig, ShapeConfig, ShardingPlan
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_plan(cfg: ModelConfig, shape: ShapeConfig,
+              mesh: Optional[jax.sharding.Mesh],
+              strategy: str = "tp") -> ShardingPlan:
+    """Map (arch x shape) onto the mesh.
+
+    strategy='tp' (default): batch over ('pod','data'), tensor parallelism
+    over 'model', fsdp per arch flag.  Decode with batch smaller than the
+    dp degree (long_500k: batch=1) re-purposes the data (and model) axes as
+    KV-sequence shards — distributed flash-decode.
+
+    strategy='fsdp': pure data parallelism over EVERY mesh axis with fully
+    sharded params (ZeRO-3-style): no activation all-reduces at all; the
+    collective load becomes per-layer param all-gathers — the right trade
+    when tokens/device is high and TP would replicate attention (e.g.
+    gemma2's 8 heads on a 16-way model axis).  Non-MoE archs only.
+    """
+    if mesh is None:
+        return ShardingPlan()
+    names = mesh.axis_names
+
+    if strategy == "fsdp":
+        assert cfg.moe is None, "fsdp strategy: MoE needs the model axis"
+        all_axes = tuple(a for a in ("pod", "data", "model") if a in names)
+        total = 1
+        for a in all_axes:
+            total *= mesh.shape[a]
+        assert shape.kind == "train" and shape.global_batch % total == 0, (
+            "fsdp strategy is a training-shape plan")
+        return ShardingPlan(mesh=mesh, dp_axes=all_axes, tp_axis=None,
+                            fsdp_axis=all_axes, seq_axes=())
+
+    dp_axes = tuple(a for a in ("pod", "data") if a in names)
+    dp = 1
+    for a in dp_axes:
+        dp *= mesh.shape[a]
+
+    seq_axes: tuple = ()
+    if shape.kind == "decode" and shape.global_batch < dp:
+        # batch cannot fill the dp axes: shard the KV sequence instead
+        dp_axes = ()
+        seq_axes = tuple(a for a in ("data", "model") if a in names)
+    elif shape.global_batch % max(dp, 1) != 0:
+        # drop the pod axis from batch sharding if needed
+        dp_axes = ("data",) if "data" in names else ()
+
+    return ShardingPlan(
+        mesh=mesh,
+        dp_axes=dp_axes,
+        tp_axis="model" if "model" in names else None,
+        fsdp_axis="data" if (cfg.fsdp and "data" in names) else None,
+        seq_axes=seq_axes,
+    )

@@ -1,0 +1,72 @@
+"""Training launcher.
+
+Two modes:
+
+* ``--reduced`` (default): run REAL optimizer steps on this host with a
+  reduced config — the end-to-end driver (data pipeline -> train_step ->
+  checkpoints -> telemetry).
+* ``--aot``: AOT lower+compile the full production config against the
+  production mesh (equivalent to one dry-run cell) — what a cluster
+  controller would ship to workers.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --steps 50
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b --aot
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import ARCH_IDS, SHAPES, get_config, local_plan
+from repro.configs.base import ShapeConfig
+from repro.data import SyntheticPipeline
+from repro.models import model
+from repro.optim import AdamW
+from repro.train import TrainState, fit, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="gemma2-2b")
+    ap.add_argument("--shape", choices=tuple(SHAPES), default="train_4k")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--clip", default="quantile",
+                    choices=("quantile", "global_norm", "none"))
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--aot", action="store_true",
+                    help="AOT-compile the full config on the production mesh")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    if args.aot:
+        # defer to the dry-run machinery (shared code path)
+        from repro.launch import dryrun
+        res = dryrun.run_cell(args.arch, args.shape,
+                              multi_pod=args.multi_pod, clip=args.clip)
+        print("AOT compile OK:", res["arch"], res["shape"], res["mesh"])
+        return
+
+    cfg = get_config(args.arch).reduced()
+    plan = local_plan()
+    shape = ShapeConfig("cli", seq_len=args.seq, global_batch=args.batch,
+                        kind="train")
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    opt = AdamW(lr=3e-4)
+    state = TrainState(params=params, opt=opt.init(params),
+                       step=jnp.zeros((), jnp.int32))
+    step_fn = make_train_step(cfg, plan, opt, clip=args.clip)
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2) if args.ckpt_dir else None
+    pipe = SyntheticPipeline(cfg, shape, seed=0)
+    out = fit(train_step=step_fn, state=state, pipeline=pipe,
+              steps=args.steps, ckpt=ckpt, ckpt_every=25, log_every=10)
+    pipe.close()
+    print(f"done: loss {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models import model
+from repro.models.model import (
+    decode_step, forward, init, init_cache, lm_loss, param_specs, cache_specs,
+)

@@ -1,0 +1,200 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv audio frontend is a STUB by assignment: ``input_specs`` supplies
+precomputed frame embeddings (B, S_enc, D).  Encoder: bidirectional
+attention blocks; decoder: causal self-attention + cross-attention.
+Positions are additive sinusoids (Whisper convention), no rope.
+Decode caches: per-decoder-layer self KV cache + precomputed cross KV.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShardingPlan
+from repro.models import attention as attn
+from repro.models import layers as L
+
+
+def sinusoid(seq: int, d: int, dtype=jnp.float32):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+def sinusoid_at(pos, d: int, dtype=jnp.float32):
+    """Single (traced) position -> (d,) sinusoid vector."""
+    i = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = jnp.asarray(pos, jnp.float32) / (10_000.0 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+def _enc_layer_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": attn.attn_init(k1, cfg, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "ffn": L.mlp_init(k2, cfg, dtype=dtype),
+    }
+
+
+def _dec_layer_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "self": attn.attn_init(k1, cfg, dtype),
+        "ln_x": jnp.zeros((cfg.d_model,), dtype),
+        "cross": attn.attn_init(k2, cfg, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "ffn": L.mlp_init(k3, cfg, dtype=dtype),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig, dtype=jnp.float32):
+    ke, kd, kv = jax.random.split(key, 3)
+    enc_keys = jax.random.split(ke, cfg.enc_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "embed": L.embed_init(kv, cfg, dtype),
+        "enc": jax.vmap(lambda k: _enc_layer_init(k, cfg, dtype))(enc_keys),
+        "dec": jax.vmap(lambda k: _dec_layer_init(k, cfg, dtype))(dec_keys),
+        "enc_norm": jnp.zeros((cfg.d_model,), dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def _self_attn(p, x, positions, cfg, plan, *, causal, cache=None, cap=0.0):
+    q, k, v = attn.qkv_proj(p, x, positions, cfg, plan, theta=0.0)
+    if cache is not None:
+        idx = positions[0]
+        new_cache, o = attn.decode_global(cache, q, k, v, idx, cfg, plan, cap)
+        return attn.out_proj(p, o, cfg, plan), new_cache
+    o = attn.flash_attention(q, k, v, causal=causal, window=0,
+                             chunk=cfg.attn_chunk, cap=cap)
+    return attn.out_proj(p, o, cfg, plan), None
+
+
+def _cross_kv(p, enc_out, cfg, plan):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    k, v = attn._repeat_kv(k, v, cfg, plan)
+    return k, v
+
+
+def _cross_attn(p, x, k, v, cfg, plan):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    hspec = attn.head_spec(cfg, plan)
+    q = plan.shard(q, plan.dspec(None, hspec, None))
+    o = attn.flash_attention(q, k, v, causal=False, window=0,
+                             chunk=cfg.attn_chunk, cap=0.0)
+    return attn.out_proj(p, o, cfg, plan)
+
+
+def encode(params, audio_embeds, cfg: ModelConfig, plan: ShardingPlan):
+    """audio_embeds: (B, S_enc, D) stub frontend output."""
+    B, S, D = audio_embeds.shape
+    x = audio_embeds + sinusoid(S, D, audio_embeds.dtype)[None]
+    x = plan.shard(x, plan.dspec(None, None))
+    positions = jnp.arange(S)
+
+    def body(x, p):
+        h, _ = _self_attn(p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                          positions, cfg, plan, causal=False)
+        x = x + h
+        x = x + L.mlp_apply(p["ffn"], L.rms_norm(x, p["ln2"], cfg.norm_eps),
+                            cfg, plan)
+        return x, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(params, batch, cfg: ModelConfig, plan: ShardingPlan, *,
+            mode: str = "train", rwkv_impl: str = "scan",
+            return_hidden: bool = False):
+    """Teacher-forced encoder-decoder forward.
+
+    batch: {'audio': (B,S_enc,D), 'tokens': (B,S_dec)}.
+    """
+    enc_out = encode(params, batch["audio"], cfg, plan)
+    tok = batch["tokens"]
+    B, S = tok.shape
+    x = L.embed_apply(params["embed"], tok, cfg, plan)
+    x = x + sinusoid(S, cfg.d_model, x.dtype)[None]
+    positions = jnp.arange(S)
+
+    def body(x, p):
+        h, _ = _self_attn(p["self"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                          positions, cfg, plan, causal=True)
+        x = x + h
+        kx, vx = _cross_kv(p["cross"], enc_out, cfg, plan)
+        x = x + _cross_attn(p["cross"],
+                            L.rms_norm(x, p["ln_x"], cfg.norm_eps),
+                            kx, vx, cfg, plan)
+        x = x + L.mlp_apply(p["ffn"], L.rms_norm(x, p["ln2"], cfg.norm_eps),
+                            cfg, plan)
+        return x, None
+
+    body_fn = body
+    if cfg.remat == "full" and mode == "train":
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body_fn, x, params["dec"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    aux = {"moe_aux": jnp.zeros(()), "moe_z": jnp.zeros(())}
+    if return_hidden:
+        return x, aux
+    logits = L.unembed_apply(params["embed"], x, cfg, plan,
+                             apply_softcap=(mode != "train"))
+    return logits, aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, enc_seq: int,
+               plan: ShardingPlan, dtype=jnp.bfloat16):
+    """Self KV caches + cross KV (filled by ``prefill_cross``)."""
+    e = attn.eff_kv(cfg, plan)
+
+    def one(_):
+        return {
+            "self": attn.init_global_cache(cfg, batch, max_seq, plan, dtype),
+            "xk": jnp.zeros((batch, enc_seq, e, cfg.hd), dtype),
+            "xv": jnp.zeros((batch, enc_seq, e, cfg.hd), dtype),
+        }
+
+    caches = [one(i) for i in range(cfg.n_layers)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+
+
+def decode_step(params, cache, token, index, cfg: ModelConfig,
+                plan: ShardingPlan):
+    """One decoder token against self-cache + precomputed cross KV."""
+    x = L.embed_apply(params["embed"], token, cfg, plan)
+    x = x + sinusoid_at(index, cfg.d_model, x.dtype)[None, None]
+    positions = jnp.full((1,), index, jnp.int32)
+
+    def body(x, inp):
+        p, c = inp
+        h, new_self = _self_attn(
+            p["self"], L.rms_norm(x, p["ln1"], cfg.norm_eps), positions,
+            cfg, plan, causal=True, cache=c["self"])
+        x = x + h
+        xq = jnp.einsum("bsd,dhk->bshk",
+                        L.rms_norm(x, p["ln_x"], cfg.norm_eps), p["cross"]["wq"])
+        valid = jnp.ones((c["xk"].shape[1],), bool)
+        o = attn._decode_scores(xq, c["xk"], c["xv"], valid, 0.0)
+        x = x + attn.out_proj(p["cross"], o, cfg, plan)
+        x = x + L.mlp_apply(p["ffn"], L.rms_norm(x, p["ln2"], cfg.norm_eps),
+                            cfg, plan)
+        return x, dict(c, self=new_self)
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec"], cache))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed_apply(params["embed"], x, cfg, plan)
+    return logits, new_cache

@@ -1,0 +1,100 @@
+"""Shared neural building blocks (pure functions over param pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShardingPlan
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    if scale is None:
+        scale = 1.0 / (shape[0] ** 0.5 if len(shape) > 1 else 1.0)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x, scale, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff=None, dtype=jnp.float32):
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _init(k1, (cfg.d_model, d_ff), dtype=dtype),
+        "w_in": _init(k2, (cfg.d_model, d_ff), dtype=dtype),
+        "w_out": _init(k3, (d_ff, cfg.d_model), dtype=dtype),
+    }
+
+
+def mlp_apply(p, x, cfg: ModelConfig, plan: ShardingPlan):
+    tp = plan.tp_axis
+    h = act_fn(cfg.act)(x @ p["w_gate"]) * (x @ p["w_in"])
+    h = plan.shard(h, plan.dspec(None, tp))
+    out = h @ p["w_out"]
+    return plan.shard(out, plan.dspec(None, None))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    p = {"embedding": _init(key, (cfg.vocab, cfg.d_model), scale=1.0,
+                            dtype=dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _init(jax.random.fold_in(key, 1),
+                             (cfg.d_model, cfg.vocab), dtype=dtype)
+    return p
+
+
+def embed_apply(p, tokens, cfg: ModelConfig, plan: ShardingPlan):
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    x = x * jnp.asarray(cfg.d_model, x.dtype) ** 0.5
+    return plan.shard(x, plan.dspec(None, None))
+
+
+def unembed_apply(p, x, cfg: ModelConfig, plan: ShardingPlan,
+                  apply_softcap: bool = True):
+    if cfg.tie_embeddings:
+        logits = x @ p["embedding"].T
+    else:
+        logits = x @ p["unembed"]
+    if apply_softcap:
+        # in train mode the softcap is applied inside the (chunked, f32)
+        # loss instead — avoids a full-logits tanh buffer
+        logits = softcap(logits, cfg.final_softcap)
+    return plan.shard(logits, plan.dspec(None, plan.tp_axis))

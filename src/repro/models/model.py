@@ -1,0 +1,427 @@
+"""Model dispatch (decoder / encdec), sharding rules and the LM loss."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShardingPlan
+from repro.models import attention as attn_mod
+from repro.models import encdec, transformer
+from repro.models import moe as moe_mod
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32):
+    if cfg.family == "encdec":
+        return encdec.init_encdec(key, cfg, dtype)
+    return transformer.init_decoder(key, cfg, dtype)
+
+
+def forward(params, batch, cfg: ModelConfig, plan: ShardingPlan,
+            mode="train", rwkv_impl="scan", return_hidden=False):
+    if cfg.family == "encdec":
+        return encdec.forward(params, batch, cfg, plan, mode=mode,
+                              return_hidden=return_hidden)
+    return transformer.forward(params, batch, cfg, plan, mode=mode,
+                               rwkv_impl=rwkv_impl,
+                               return_hidden=return_hidden)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               plan: ShardingPlan, dtype=jnp.bfloat16, enc_seq: int = 0):
+    if cfg.family == "encdec":
+        return encdec.init_cache(cfg, batch, max_seq, enc_seq or max_seq,
+                                 plan, dtype)
+    return transformer.init_cache(cfg, batch, max_seq, plan, dtype)
+
+
+def decode_step(params, cache, token, index, cfg: ModelConfig,
+                plan: ShardingPlan):
+    if cfg.family == "encdec":
+        return encdec.decode_step(params, cache, token, index, cfg, plan)
+    return transformer.decode_step(params, cache, token, index, cfg, plan)
+
+
+# ---------------------------------------------------------------------------
+# sharding rules (params + caches)
+# ---------------------------------------------------------------------------
+
+
+def _leaf_rule(name: str, cfg: ModelConfig, plan: ShardingPlan):
+    """Base PartitionSpec per parameter leaf name (unstacked ndim)."""
+    tp = plan.tp_axis if plan.tp > 1 else None
+    # without a TP axis params MUST be fully sharded (pure-FSDP strategy)
+    fsdp = plan.fsdp_axis if (cfg.fsdp or tp is None) else None
+    hs = attn_mod.head_spec(cfg, plan)
+    kv_ok = (hs is not None and cfg.n_kv_heads % plan.tp == 0)
+    kvs = hs if kv_ok else None
+    ep = moe_mod.use_ep(cfg, plan)
+
+    rules = {
+        "embedding": P(tp, fsdp),
+        "unembed": P(fsdp, tp),
+        "wq": P(fsdp, hs, None),
+        "wk": P(fsdp, kvs, None),
+        "wv": P(fsdp, kvs, None),
+        "wo": P(hs, None, fsdp),
+        "w_gate": P(fsdp, tp),
+        "w_in": P(fsdp, tp),
+        "w_out": P(tp, fsdp),
+        "router": P(None, None),
+        # rwkv time-mix
+        "w_r": P(fsdp, tp),
+        "w_k": P(fsdp, tp),
+        "w_v": P(fsdp, tp),
+        "w_g": P(fsdp, tp),
+        "w_o": P(tp, fsdp),
+        "wa": P(fsdp, None),
+        "wb": P(None, tp),
+        # rglru
+        "w_branch": P(fsdp, tp),
+        "w_gate_branch": P(fsdp, tp),
+        "w_a": P(fsdp, tp),
+        "w_x": P(fsdp, tp),
+        "conv_w": P(None, tp),
+    }
+    return rules.get(name)
+
+
+def _moe_rule(name: str, cfg, plan):
+    tp = plan.tp_axis if plan.tp > 1 else None
+    fsdp = plan.fsdp_axis if cfg.fsdp else None
+    if moe_mod.use_ep(cfg, plan):
+        return {
+            "w_gate": P(tp, fsdp, None),
+            "w_in": P(tp, fsdp, None),
+            "w_out": P(tp, None, fsdp),
+        }[name]
+    return {
+        "w_gate": P(None, fsdp, tp),
+        "w_in": P(None, fsdp, tp),
+        "w_out": P(None, tp, fsdp),
+    }[name]
+
+
+def param_specs(params, cfg: ModelConfig, plan: ShardingPlan):
+    """PartitionSpec pytree matching ``params`` (works on shapes too)."""
+
+    def rule(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        name = names[-1]
+        # rwkv channel-mix wk/wv/wr are (D,F)/(F,D)/(D,D) under 'ffn'
+        in_ffn = "ffn" in names
+        in_moe = cfg.moe is not None and in_ffn and name in (
+            "w_gate", "w_in", "w_out")
+        if in_moe:
+            spec = _moe_rule(name, cfg, plan)
+        elif in_ffn and name in ("wk", "wv", "w_r"):  # rwkv channel mix
+            tp = plan.tp_axis if plan.tp > 1 else None
+            fsdp = plan.fsdp_axis if (cfg.fsdp or tp is None) else None
+            spec = {"wk": P(fsdp, tp), "wv": P(tp, fsdp),
+                    "w_r": P(fsdp, None)}[name]
+        else:
+            spec = _leaf_rule(name, cfg, plan)
+        if spec is None:
+            spec = P()
+        ndim = len(leaf.shape)
+        pad = ndim - len(spec)
+        if pad > 0:  # stacked (scan) leading dims -> replicated
+            spec = P(*([None] * pad), *spec)
+        elif pad < 0:
+            spec = P()
+        return _divisibility_guard(spec, leaf.shape, plan)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def _divisibility_guard(spec: P, shape, plan: ShardingPlan) -> P:
+    """Drop mesh axes from dims they don't divide (e.g. whisper's vocab
+    51865 on a 16-way model axis -> replicated)."""
+    if plan.mesh is None:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for d, p_ in zip(shape, parts):
+        if p_ is None:
+            out.append(None)
+            continue
+        axes = (p_,) if isinstance(p_, str) else tuple(p_)
+        size = 1
+        for a in axes:
+            size *= plan.mesh.shape[a]
+        out.append(p_ if d % size == 0 else None)
+    return P(*out)
+
+
+def cache_specs(cache, cfg: ModelConfig, plan: ShardingPlan):
+    """Cache sharding: batch over dp axes, kv-heads over tp (when even),
+    sequence over plan.seq_axes for global caches (long-context decode)."""
+    hs = attn_mod.head_spec(cfg, plan)
+    e = attn_mod.eff_kv(cfg, plan)
+    ehs = hs if (hs is not None and e % plan.tp == 0) else None
+    lead = plan.dp_axes if plan.dp_axes else None
+    seq = None
+    n_seq_shards = 1
+    if plan.seq_axes:
+        seq = plan.seq_axes if len(plan.seq_axes) > 1 else plan.seq_axes[0]
+        for a in plan.seq_axes:
+            n_seq_shards *= plan.mesh.shape[a]
+        if plan.tp_axis in plan.seq_axes:
+            ehs = None  # a mesh axis can appear only once per spec
+
+    def rule(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        name = names[-1]
+        ndim = len(leaf.shape)
+        if name in ("k", "v", "xk", "xv"):
+            # stacked caches have a leading scan dim: the seq dim is ndim-3
+            seq_len = leaf.shape[-3]
+            s_ok = seq is not None and seq_len % n_seq_shards == 0
+            base = P(lead, seq, ehs, None) if s_ok else P(
+                lead, None, ehs, None)
+        elif name == "pos":
+            base = P()
+        elif name in ("shift", "cshift", "conv"):
+            base = P(lead, None, None)
+        elif name == "state":
+            base = P(lead, ehs, None, None)
+        elif name == "h":
+            base = P(lead, None)
+        else:
+            base = P()
+        pad = ndim - len(base)
+        if pad > 0:
+            base = P(*([None] * pad), *base)
+        return _divisibility_guard(base, leaf.shape, plan)
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(logits, labels, mask, *, z_weight: float = 1e-4,
+            plan: Optional[ShardingPlan] = None, final_softcap: float = 0.0,
+            chunk: int = 512):
+    """Stable CE + z-loss. logits (B,S,V); labels/mask (B,S).
+
+    Memory discipline (these dominate training HBM otherwise):
+      * with a TP mesh the vocab dim stays sharded: the label-logit gather
+        runs *per vocab shard* under shard_map (out-of-range labels
+        contribute zero, psum-combined).  A take_along_axis over the sharded
+        dim would make GSPMD all-gather full-vocab f32 logits.
+      * the sequence is processed in rematerialized chunks, so only one
+        (B, chunk, V/tp) f32 block is ever live (forward and backward);
+      * the final logit softcap (gemma2) is applied inside the chunk in f32
+        — ``forward(mode='train')`` emits raw logits.
+    """
+    if plan is not None and plan.mesh is not None and plan.tp_axis:
+        return _lm_loss_sharded(logits, labels, mask, plan, z_weight,
+                                final_softcap, chunk)
+    from repro.models.layers import softcap as _softcap
+    lf = _softcap(logits.astype(jnp.float32), final_softcap)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    m = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(m), 1.0)
+    nll = jnp.sum((logz - ll) * m) / denom
+    zloss = jnp.sum(logz * logz * m) / denom
+    return nll + z_weight * zloss, {"nll": nll, "zloss": zloss}
+
+
+def lm_loss_fused(hidden, embed_params, labels, mask, cfg: ModelConfig,
+                  plan: ShardingPlan, *, z_weight: float = 1e-4,
+                  chunk: int = 512):
+    """Fused chunked unembed + CE: full logits are NEVER materialized.
+
+    ``hidden``: final normed hidden states (B, S, D).  Per rematerialized
+    sequence chunk we compute the (B, c, V/tp) logits block in f32
+    (``preferred_element_type``), reduce it to three scalars and discard it;
+    the backward recomputes each block.  This removes the dominant training
+    buffers (multiple full-vocab f32 logits tensors survive even a chunked
+    post-hoc loss, because XLA hoists the f32 convert out of the loop).
+    """
+    from repro.models.layers import softcap as _softcap
+    tied = cfg.tie_embeddings
+    W = embed_params["embedding"] if tied else embed_params["unembed"]
+    cap = cfg.final_softcap
+    V = cfg.vocab
+
+    def chunk_logits(xc, Wl):
+        if tied:  # Wl: (V_loc, D)
+            lg = jnp.einsum("bcd,vd->bcv", xc, Wl,
+                            preferred_element_type=jnp.float32)
+        else:     # Wl: (D, V_loc)
+            lg = jnp.einsum("bcd,dv->bcv", xc, Wl,
+                            preferred_element_type=jnp.float32)
+        return _softcap(lg, cap)
+
+    def run(x, Wl, lb, mk, tpx):
+        b, s, _ = x.shape
+        c = min(chunk, s)
+        n_chunks = -(-s // c)
+        pad = n_chunks * c - s
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+            lb = jnp.pad(lb, ((0, 0), (0, pad)))
+            mk = jnp.pad(mk, ((0, 0), (0, pad)))
+        v_loc = Wl.shape[0] if tied else Wl.shape[1]
+        off = (jax.lax.axis_index(tpx) * v_loc) if tpx else 0
+
+        def cstep(carry, i):
+            nll_a, zl_a, den_a = carry
+            xc = jax.lax.dynamic_slice_in_dim(x, i * c, c, 1)
+            lbc = jax.lax.dynamic_slice_in_dim(lb, i * c, c, 1)
+            mkc = jax.lax.dynamic_slice_in_dim(mk, i * c, c, 1)
+            lf = chunk_logits(xc, Wl)
+            mx = jnp.max(jax.lax.stop_gradient(lf), -1)
+            if tpx:
+                mx = jax.lax.pmax(mx, tpx)
+            mx = jax.lax.stop_gradient(mx)
+            sumexp = jnp.sum(jnp.exp(lf - mx[..., None]), -1)
+            if tpx:
+                sumexp = jax.lax.psum(sumexp, tpx)
+            logz = mx + jnp.log(sumexp)
+            loc = lbc.astype(jnp.int32) - off
+            inrange = (loc >= 0) & (loc < v_loc)
+            ll = jnp.take_along_axis(
+                lf, jnp.clip(loc, 0, v_loc - 1)[..., None], axis=-1)[..., 0]
+            ll = jnp.where(inrange, ll, 0.0)
+            if tpx:
+                ll = jax.lax.psum(ll, tpx)
+            m = mkc.astype(jnp.float32)
+            return (nll_a + jnp.sum((logz - ll) * m),
+                    zl_a + jnp.sum(logz * logz * m),
+                    den_a + jnp.sum(m)), None
+
+        cstep = jax.checkpoint(
+            cstep, policy=jax.checkpoint_policies.nothing_saveable)
+        zero = jnp.zeros((), jnp.float32)
+        (nll, zl, den), _ = jax.lax.scan(cstep, (zero, zero, zero),
+                                         jnp.arange(n_chunks))
+        return nll, zl, den
+
+    if plan.mesh is None:
+        nll, zl, den = run(hidden, W, labels, mask, None)
+        den = jnp.maximum(den, 1.0)
+        nll, zl = nll / den, zl / den
+        return nll + z_weight * zl, {"nll": nll, "zloss": zl}
+
+    # vocab not divisible by tp (whisper: 51865) -> replicate the unembed
+    tpx = plan.tp_axis if V % plan.tp == 0 else None
+    lead = plan.dp_axes if plan.dp_axes else None
+    fsdp = plan.fsdp_axis if (cfg.fsdp or plan.tp_axis is None) else None
+    if plan.tp_axis is None and plan.mesh is not None:
+        # pure-FSDP strategy: without vocab sharding the loss would gather
+        # the full unembed AND all-reduce a full f32 embedding gradient
+        # (observed 6 x 5.25 GiB on gemma3).  Re-purpose the 'model' axis as
+        # vocab parallelism inside the loss region only: batch reshards to
+        # the remaining dp axes, W keeps vocab/model + D/data sharding.
+        names = plan.mesh.axis_names
+        if "model" in names and V % plan.mesh.shape["model"] == 0:
+            tpx = "model"
+            lead = tuple(a for a in (plan.dp_axes or ()) if a != "model") \
+                or None
+            fs = plan.fsdp_axis
+            if fs is not None:
+                fs_t = (fs,) if isinstance(fs, str) else tuple(fs)
+                fs2 = tuple(a for a in fs_t if a != "model")
+                fsdp = (fs2[0] if len(fs2) == 1 else fs2) if fs2 else None
+    wspec = P(tpx, fsdp) if tied else P(fsdp, tpx)
+
+    lead_axes = lead if lead is not None else ()
+    lead_axes = (lead_axes,) if isinstance(lead_axes, str) else tuple(
+        lead_axes)
+
+    def body(x, Wl, lb, mk):
+        if fsdp is not None:
+            Wl = jax.lax.all_gather(Wl, fsdp, axis=(1 if tied else 0),
+                                    tiled=True)
+        nll, zl, den = run(x, Wl, lb, mk, tpx)
+        if lead_axes:
+            nll = jax.lax.psum(nll, lead_axes)
+            zl = jax.lax.psum(zl, lead_axes)
+            den = jax.lax.psum(den, lead_axes)
+        den = jnp.maximum(den, 1.0)
+        return nll / den, zl / den
+
+    nll, zl = jax.shard_map(
+        body, mesh=plan.mesh,
+        in_specs=(P(lead, None, None), wspec, P(lead, None), P(lead, None)),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )(hidden, W, labels, mask)
+    return nll + z_weight * zl, {"nll": nll, "zloss": zl}
+
+
+def _lm_loss_sharded(logits, labels, mask, plan: ShardingPlan,
+                     z_weight: float, final_softcap: float, chunk: int):
+    from repro.models.layers import softcap as _softcap
+    tpx = plan.tp_axis
+    lead = plan.dp_axes if plan.dp_axes else None
+    V = logits.shape[-1]
+    vshard = V // plan.tp
+
+    def body(lg, lb, mk):
+        b, s, _ = lg.shape
+        c = min(chunk, s)
+        n_chunks = -(-s // c)
+        pad = n_chunks * c - s
+        if pad:
+            lg = jnp.pad(lg, ((0, 0), (0, pad), (0, 0)))
+            lb = jnp.pad(lb, ((0, 0), (0, pad)))
+            mk = jnp.pad(mk, ((0, 0), (0, pad)))  # pad mask = 0
+        off = jax.lax.axis_index(tpx) * vshard
+
+        def cstep(carry, i):
+            nll_a, zl_a, den_a = carry
+            sl = jax.lax.dynamic_slice_in_dim(lg, i * c, c, 1)
+            lbc = jax.lax.dynamic_slice_in_dim(lb, i * c, c, 1)
+            mkc = jax.lax.dynamic_slice_in_dim(mk, i * c, c, 1)
+            lf = _softcap(sl.astype(jnp.float32), final_softcap)
+            # max shift is gradient-neutral; pmax has no VJP
+            lmax = jax.lax.stop_gradient(
+                jax.lax.pmax(jnp.max(jax.lax.stop_gradient(lf), -1), tpx))
+            sumexp = jax.lax.psum(
+                jnp.sum(jnp.exp(lf - lmax[..., None]), -1), tpx)
+            logz = lmax + jnp.log(sumexp)
+            loc = lbc.astype(jnp.int32) - off
+            inrange = (loc >= 0) & (loc < vshard)
+            ll_loc = jnp.take_along_axis(
+                lf, jnp.clip(loc, 0, vshard - 1)[..., None], axis=-1)[..., 0]
+            ll = jax.lax.psum(jnp.where(inrange, ll_loc, 0.0), tpx)
+            m = mkc.astype(jnp.float32)
+            return (nll_a + jnp.sum((logz - ll) * m),
+                    zl_a + jnp.sum(logz * logz * m),
+                    den_a + jnp.sum(m)), None
+
+        cstep = jax.checkpoint(
+            cstep, policy=jax.checkpoint_policies.nothing_saveable)
+        zero = jnp.zeros((), jnp.float32)
+        (nll, zl, den), _ = jax.lax.scan(cstep, (zero, zero, zero),
+                                         jnp.arange(n_chunks))
+        if plan.dp_axes:
+            nll = jax.lax.psum(nll, plan.dp_axes)
+            zl = jax.lax.psum(zl, plan.dp_axes)
+            den = jax.lax.psum(den, plan.dp_axes)
+        den = jnp.maximum(den, 1.0)
+        return nll / den, zl / den
+
+    nll, zl = jax.shard_map(
+        body, mesh=plan.mesh,
+        in_specs=(P(lead, None, tpx), P(lead, None), P(lead, None)),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )(logits, labels, mask)
+    return nll + z_weight * zl, {"nll": nll, "zloss": zl}

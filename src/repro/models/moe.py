@@ -1,0 +1,163 @@
+"""Mixture-of-Experts: top-k routing + sort-based grouped matmul
+(``lax.ragged_dot``), with two sharding strategies:
+
+* **EP** (expert parallelism) when ``num_experts % tp == 0`` (e.g. Kimi-K2:
+  384 experts over 16 model shards = 24/shard): tokens are sorted by expert,
+  each shard takes its experts' contiguous segment with a static *capacity*
+  slice (``dynamic_slice`` at a traced offset — XLA-legal), computes the
+  grouped matmul locally and scatter-adds back; partial outputs are psum'd
+  over the model axis.  No all-to-all: activations are already replicated
+  over the model axis in TP blocks, so the EP combine is one all-reduce.
+* **TP-within-expert** when experts don't divide the mesh (Mixtral: 8
+  experts over 16 shards): every shard computes all assignments against an
+  ``F/tp`` slice of every expert and psums the partial outputs.
+
+The local (mesh-free) path is the reference implementation used by the
+smoke tests and the oracle for the sharded paths.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShardingPlan
+from repro.models.layers import _init, act_fn
+
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.moe
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _init(ks[0], (cfg.d_model, m.num_experts), dtype=jnp.float32),
+        "w_gate": _init(ks[1], (m.num_experts, cfg.d_model, m.expert_ffn),
+                        dtype=dtype),
+        "w_in": _init(ks[2], (m.num_experts, cfg.d_model, m.expert_ffn),
+                      dtype=dtype),
+        "w_out": _init(ks[3], (m.num_experts, m.expert_ffn, cfg.d_model),
+                       dtype=dtype),
+    }
+
+
+def use_ep(cfg: ModelConfig, plan: ShardingPlan) -> bool:
+    return (plan.tp > 1 and cfg.moe is not None
+            and cfg.moe.num_experts % plan.tp == 0)
+
+
+def _route(x, router, cfg: ModelConfig):
+    """Top-k routing. x: (T, D). Returns ids/gates (T, K) + aux losses."""
+    m = cfg.moe
+    logits = (x.astype(jnp.float32) @ router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, m.top_k)
+    gates = gates / jnp.sum(gates, -1, keepdims=True)
+    # load-balance loss (Switch): E * sum_e f_e * p_e
+    E = m.num_experts
+    f = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    f = f / jnp.maximum(jnp.sum(f), 1.0)
+    p = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f * p)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return ids, gates.astype(x.dtype), aux, z
+
+
+def _sort_by_expert(ids, gates, E: int):
+    """Flatten (T,K) assignments and sort by expert id (stable)."""
+    T, K = ids.shape
+    flat_e = ids.reshape(-1)
+    flat_t = jnp.arange(T * K, dtype=jnp.int32) // K
+    order = jnp.argsort(flat_e)  # stable
+    se = flat_e[order]
+    st = flat_t[order]
+    sg = gates.reshape(-1)[order]
+    group_sizes = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    return se, st, sg, group_sizes
+
+
+def _capacity(tokens: int, top_k: int, E: int, cf: float) -> int:
+    cap = int(tokens * top_k / E * cf)
+    return max(8, -(-cap // 8) * 8)
+
+
+def _grouped_moe(x_local, router, w_gate, w_in, w_out, cfg, *, first, El, Ce,
+                 act):
+    """Capacity-grouped MoE (sort -> (El, Ce, D) dispatch -> 3 einsums).
+
+    Exact static FLOPs (= El*Ce rows through a dense grouped matmul),
+    TPU-portable (no ragged_dot), tokens beyond an expert's capacity are
+    dropped (standard practice; cf controls headroom).
+    ``first``/``El`` select this shard's expert range (0/E when replicated).
+    """
+    E = cfg.moe.num_experts
+    T = x_local.shape[0]
+    ids, gates, aux, z = _route(x_local, router, cfg)
+    se, st, sg, gs = _sort_by_expert(ids, gates, E)
+    # slot of each sorted assignment within its expert group
+    gstart = jnp.cumsum(gs) - gs
+    p = jnp.arange(se.shape[0], dtype=jnp.int32)
+    slot = p - gstart[se]
+    le = se - first
+    valid = (le >= 0) & (le < El) & (slot < Ce)
+    lec = jnp.where(valid, le, 0)
+    slc = jnp.where(valid, slot, 0)
+    xs = jnp.zeros((El, Ce, x_local.shape[1]), x_local.dtype)
+    xs = xs.at[lec, slc].add(
+        jnp.where(valid[:, None], x_local[st], 0))
+    h = act(jnp.einsum("ecd,edf->ecf", xs, w_gate)) * jnp.einsum(
+        "ecd,edf->ecf", xs, w_in)
+    y = jnp.einsum("ecf,efd->ecd", h, w_out)
+    contrib = y[lec, slc] * jnp.where(valid, sg, 0.0)[:, None]
+    out = jnp.zeros_like(x_local).at[st].add(contrib)
+    return out, aux, z
+
+
+def moe_apply(p, x, cfg: ModelConfig, plan: ShardingPlan):
+    """x: (B, S, D) -> (out, aux_loss, z_loss)."""
+    B, S, D = x.shape
+    x2 = x.reshape(B * S, D)
+    m = cfg.moe
+    E = m.num_experts
+    act = act_fn(cfg.act)
+
+    if plan.mesh is None or plan.tp == 1:
+        Ce = _capacity(B * S, m.top_k, E, m.capacity_factor)
+        out, aux, z = _grouped_moe(x2, p["router"], p["w_gate"], p["w_in"],
+                                   p["w_out"], cfg, first=0, El=E, Ce=Ce,
+                                   act=act)
+        return out.reshape(B, S, D), aux, z
+
+    tp = plan.tp
+    lead = plan.dp_axes if plan.dp_axes else None
+    tpx = plan.tp_axis
+    fsdp = plan.fsdp_axis if cfg.fsdp else None
+    T_loc = (B // max(plan.dp, 1)) * S
+    Ce = _capacity(T_loc, m.top_k, E, m.capacity_factor)
+    ep = use_ep(cfg, plan)
+    El = E // tp if ep else E
+
+    def body(x_local, router, w_gate, w_in, w_out):
+        if fsdp is not None:
+            # FSDP: weights stored data-sharded; gather for compute
+            w_gate = jax.lax.all_gather(w_gate, fsdp, axis=1, tiled=True)
+            w_in = jax.lax.all_gather(w_in, fsdp, axis=1, tiled=True)
+            w_out = jax.lax.all_gather(w_out, fsdp, axis=2, tiled=True)
+        first = jax.lax.axis_index(tpx) * El if ep else 0
+        out, aux, z = _grouped_moe(x_local, router, w_gate, w_in, w_out,
+                                   cfg, first=first, El=El, Ce=Ce, act=act)
+        return jax.lax.psum(out, tpx), aux, z
+
+    if ep:  # expert weights sharded over the model axis
+        wspecs = (P(tpx, fsdp, None), P(tpx, fsdp, None), P(tpx, None, fsdp))
+    else:   # TP within each expert (ffn dim sharded)
+        wspecs = (P(None, fsdp, tpx), P(None, fsdp, tpx), P(None, tpx, fsdp))
+
+    out, aux, z = jax.shard_map(
+        body, mesh=plan.mesh,
+        in_specs=(P(lead, None), P(None, None)) + wspecs,
+        out_specs=(P(lead, None), P(), P()),
+        check_vma=False,
+    )(x2, p["router"], p["w_gate"], p["w_in"], p["w_out"])
+    return out.reshape(B, S, D), aux, z

@@ -1,0 +1,98 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: input -> [linear -> causal depthwise conv(4) -> RG-LRU] * [linear ->
+GeLU] -> output linear.  The RG-LRU recurrence
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)         (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+is an elementwise affine scan -> ``jax.lax.associative_scan`` for
+train/prefill (log-depth, parallel), a single fused step for decode.
+State per layer: h (B, R) + conv tail (B, 3, R).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShardingPlan
+from repro.models.layers import _init
+
+C_FACTOR = 8.0
+CONV_W = 4
+
+
+def rglru_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    D = cfg.d_model
+    R = cfg.d_model  # rnn width == d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "w_branch": _init(ks[0], (D, R), dtype=dtype),
+        "w_gate_branch": _init(ks[1], (D, R), dtype=dtype),
+        "conv_w": _init(ks[2], (CONV_W, R), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((R,), dtype),
+        "w_a": _init(ks[3], (R, R), dtype=dtype),
+        "b_a": jnp.zeros((R,), dtype),
+        "w_x": _init(ks[4], (R, R), dtype=dtype),
+        "b_x": jnp.zeros((R,), dtype),
+        "lam": jnp.full((R,), 0.65, dtype),  # sigmoid^-1-ish init
+        "w_out": _init(ks[5], (R, D), dtype=dtype),
+    }
+
+
+def _conv_causal(x, w, b, tail):
+    """Depthwise causal conv, width 4.  x: (B,S,R); tail: (B,3,R)."""
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(
+        xp[:, CONV_W - 1 - i: xp.shape[1] - i] * w[CONV_W - 1 - i]
+        for i in range(CONV_W)
+    )
+    return out + b, xp[:, -(CONV_W - 1):]
+
+
+def _rg_lru(x, p, h0):
+    """x: (B,S,R) conv output; h0: (B,R). Returns (h_seq, h_last)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a = -C_FACTOR * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+
+    if x.shape[1] == 1:  # decode
+        h = a[:, 0] * h0 + gated[:, 0]
+        return h[:, None], h
+
+    # prepend carry as an extra step: h_0 enters via (a=1 -> identity)
+    a_all = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+    b_all = jnp.concatenate([h0[:, None].astype(jnp.float32), gated], axis=1)
+
+    def comb(l, r_):
+        al, bl = l
+        ar, br = r_
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(comb, (a_all, b_all), axis=1)
+    return h[:, 1:], h[:, -1]
+
+
+def rglru_apply(p, x, cfg: ModelConfig, plan: ShardingPlan, cache=None):
+    """x: (B,S,D). cache: {'h': (B,R), 'conv': (B,3,R)} or None."""
+    B, S, D = x.shape
+    R = cfg.d_model
+    tp = plan.tp_axis
+    h0 = cache["h"] if cache else jnp.zeros((B, R), jnp.float32)
+    tail = (cache["conv"] if cache
+            else jnp.zeros((B, CONV_W - 1, R), x.dtype))
+
+    u = x @ p["w_branch"]
+    u = plan.shard(u, plan.dspec(None, tp))
+    g = jax.nn.gelu(x @ p["w_gate_branch"])
+    g = plan.shard(g, plan.dspec(None, tp))
+    u, new_tail = _conv_causal(u, p["conv_w"], p["conv_b"], tail)
+    h, h_last = _rg_lru(u, p, h0)
+    out = (h.astype(x.dtype) * g) @ p["w_out"]
+    out = plan.shard(out, plan.dspec(None, None))
+    return out, {"h": h_last, "conv": new_tail}

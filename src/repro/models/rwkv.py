@@ -1,0 +1,185 @@
+"""RWKV-6 (Finch) time-mix / channel-mix layers — attention-free mixer with
+data-dependent per-channel decay (arXiv:2404.05892).
+
+Two exact time-mix implementations:
+  * ``impl='scan'``   — the recurrence as ``lax.scan`` over time (baseline;
+    numerically exact for any decay, but latency-bound: O(S) tiny matmuls).
+  * ``impl='chunked'``— GLA-style chunked form: within a chunk of C tokens
+    the pairwise decay factorizes into bounded per-side exponentials
+    (clamped at +/-CLAMP nats; exact whenever the within-chunk decay range
+    is below the clamp, which holds for trained RWKV decays |log w| <~ 0.3
+    with C=16..64); across chunks the state is carried exactly.  This turns
+    the mixer into MXU-friendly (C x C) x (C x hd) matmuls — the §Perf
+    hillclimb target for the rwkv cells.
+
+State per layer: shift (B,1,D) token-shift buffer + wkv state (B,H,hd,hd).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShardingPlan
+from repro.models.layers import _init, rms_norm
+
+CLAMP = 25.0
+LORA_R = 64
+
+
+def rwkv_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    D = cfg.d_model
+    H, hd = cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 12)
+    return {
+        "mu": 0.5 * jnp.ones((5, D), dtype),  # lerp weights: r,k,v,w,g
+        "w_r": _init(ks[0], (D, H * hd), dtype=dtype),
+        "w_k": _init(ks[1], (D, H * hd), dtype=dtype),
+        "w_v": _init(ks[2], (D, H * hd), dtype=dtype),
+        "w_g": _init(ks[3], (D, H * hd), dtype=dtype),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x @ wa) @ wb))
+        "w0": jnp.full((H * hd,), -1.0, dtype),
+        "wa": _init(ks[4], (D, LORA_R), dtype=dtype),
+        "wb": _init(ks[5], (LORA_R, H * hd), scale=0.01, dtype=dtype),
+        "u": _init(ks[6], (H, hd), scale=0.5, dtype=dtype),
+        "ln_scale": jnp.zeros((H * hd,), dtype),
+        "w_o": _init(ks[7], (H * hd, D), dtype=dtype),
+    }
+
+
+def chanmix_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": 0.5 * jnp.ones((2, D), dtype),  # k, r
+        "wk": _init(ks[0], (D, F), dtype=dtype),
+        "wv": _init(ks[1], (F, D), dtype=dtype),
+        "w_r": _init(ks[2], (D, D), dtype=dtype),
+    }
+
+
+def _shift(x, prev):
+    """Token shift: x_{t-1} with ``prev`` filling t=0. x: (B,S,D)."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def _wkv_scan(r, k, v, logw, u, state):
+    """Exact recurrence over time. r,k,v,logw: (B,S,H,hd); state (B,H,hd,hd).
+    Returns (o, new_state) with o:(B,S,H,hd).
+
+    o_t = r_t . (S_{t-1} + diag(u) k_t^T v_t);  S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    """
+    def step(S, inp):
+        rt, kt, vt, wt = inp  # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]       # (B,H,hd,hd)
+        o = jnp.einsum("bhk,bhkv->bhv", rt, S + u[..., :, None] * kv)
+        S = jnp.exp(wt)[..., :, None] * S + kv
+        return S, o
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, logw))
+    state, o = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(o, 0, 1), state
+
+
+def _wkv_chunked(r, k, v, logw, u, state, chunk):
+    """Chunked GLA form (see module docstring). Exact for moderate decay."""
+    B, S, H, hd = r.shape
+    C = min(chunk, S)
+    pad = (-S) % C
+    if pad:
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n = (S + pad) // C
+    shp = (B, n, C, H, hd)
+    r_, k_, v_, lw = (t.reshape(shp) for t in (r, k, v, logw))
+    cum = jnp.cumsum(lw, axis=2)          # logP_t (inclusive)
+    cum_prev = cum - lw                   # logP_{t-1}
+    logPC = cum[:, :, -1:]                # (B,n,1,H,hd)
+
+    # bounded pairwise-decay factorization (clamped)
+    r_in = r_ * jnp.exp(jnp.minimum(cum_prev, CLAMP))         # decays from t
+    k_in = k_ * jnp.exp(jnp.maximum(-cum, -CLAMP))            # grows to 1/P_i
+    att = jnp.einsum("bnthc,bnihc->bnhti", r_in, k_in)        # h=head,c=chan
+    att = jnp.tril(jnp.ones((C, C), bool), -1)[None, None, None] * att
+    o_intra = jnp.einsum("bnhti,bnihc->bnthc", att, v_)
+    # u-bonus diagonal term
+    s_diag = jnp.einsum("bnthc,bnthc->bnth", r_ * u[None, None, None], k_)
+    o_intra = o_intra + s_diag[..., None] * v_
+
+    # inter-chunk: carry state S across chunks (scan over n)
+    r_st = r_ * jnp.exp(cum_prev)                              # for S_0 term
+    k_st = k_ * jnp.exp(jnp.maximum(logPC - cum, -CLAMP))      # <= 1
+    PC = jnp.exp(logPC[:, :, 0])                               # (B,n,H,hd)
+
+    def step(S, inp):
+        rs, ks_, vs, pc = inp  # (B,C,H,hd) x3, (B,H,hd)
+        o = jnp.einsum("bthc,bhcv->bthv", rs, S)
+        S = pc[..., :, None] * S + jnp.einsum("bthc,bthv->bhcv", ks_, vs)
+        return S, o
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r_st, k_st, v_, PC))
+    state, o_inter = jax.lax.scan(step, state, xs)
+    o = o_intra + jnp.moveaxis(o_inter, 0, 1)
+    o = o.reshape(B, n * C, H, hd)[:, :S]
+    return o, state
+
+
+def rwkv_apply(p, x, cfg: ModelConfig, plan: ShardingPlan, cache=None,
+               impl: str = "scan"):
+    """Time-mix. x: (B,S,D). cache: {'shift': (B,1,D), 'state': (B,H,hd,hd)}
+    or None (training: zeros).  Returns (out, new_cache)."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    hspec = plan.tp_axis if (H % plan.tp == 0 and plan.tp > 1) else None
+    prev = cache["shift"] if cache else jnp.zeros((B, 1, D), x.dtype)
+    state = (cache["state"] if cache
+             else jnp.zeros((B, H, hd, hd), jnp.float32))
+    xs = _shift(x, prev)
+    mu = p["mu"]
+    xr, xk, xv, xw, xg = (_lerp(x, xs, mu[i]) for i in range(5))
+    r = (xr @ p["w_r"]).reshape(B, S, H, hd)
+    k = (xk @ p["w_k"]).reshape(B, S, H, hd)
+    v = (xv @ p["w_v"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["w_g"])
+    w_raw = p["w0"] + jnp.tanh(xw @ p["wa"]) @ p["wb"]
+    logw = -jnp.exp(w_raw.astype(jnp.float32)).reshape(B, S, H, hd)
+    r = plan.shard(r, plan.dspec(None, hspec, None))
+    k = plan.shard(k, plan.dspec(None, hspec, None))
+    v = plan.shard(v, plan.dspec(None, hspec, None))
+
+    u = p["u"].astype(jnp.float32)
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    if S == 1:  # decode fast path: one recurrence step
+        o, state = _wkv_scan(rf, kf, vf, logw, u, state)
+    elif impl == "chunked":
+        o, state = _wkv_chunked(rf, kf, vf, logw, u, state, cfg.rwkv_chunk)
+    else:
+        o, state = _wkv_scan(rf, kf, vf, logw, u, state)
+
+    o = o.reshape(B, S, H * hd)
+    # per-head group norm
+    o = rms_norm(o.reshape(B, S, H, hd),
+                 p["ln_scale"].reshape(H, hd), cfg.norm_eps).reshape(
+        B, S, H * hd)
+    out = (o.astype(x.dtype) * g) @ p["w_o"]
+    out = plan.shard(out, plan.dspec(None, None))
+    new_cache = {"shift": x[:, -1:], "state": state}
+    return out, new_cache
+
+
+def chanmix_apply(p, x, cfg: ModelConfig, plan: ShardingPlan, cache=None):
+    """Channel-mix (squared-relu FFN with token shift)."""
+    B, S, D = x.shape
+    prev = cache["shift"] if cache else jnp.zeros((B, 1, D), x.dtype)
+    xs = _shift(x, prev)
+    xk = _lerp(x, xs, p["mu"][0])
+    xr = _lerp(x, xs, p["mu"][1])
+    h = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    h = plan.shard(h, plan.dspec(None, plan.tp_axis))
+    out = jax.nn.sigmoid(xr @ p["w_r"]) * (h @ p["wv"])
+    out = plan.shard(out, plan.dspec(None, None))
+    return out, {"shift": x[:, -1:]}

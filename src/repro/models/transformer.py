@@ -1,0 +1,260 @@
+"""Decoder-only LM assembled from a repeating layer-pattern unit.
+
+The layer stack is a ``lax.scan`` over ``cfg.n_units`` repeats of the
+pattern unit (e.g. gemma3: (L,L,L,L,L,G)); the unit body is unrolled, so
+every position has *static* layer kind / window / rope-theta.  Remainder
+layers (n_layers % unit) are applied unrolled after the scan.  Scanning
+keeps the HLO size O(unit) instead of O(n_layers) — essential for 512-way
+SPMD compiles.
+
+Caches are pytrees stacked along the scan dimension; decode steps scan over
+(params, cache) pairs and emit the updated cache as the scan output.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, LOCAL, RGLRU, RWKV, ModelConfig, ShardingPlan
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv as rwkv_mod
+
+
+# ---------------------------------------------------------------------------
+# per-layer init/apply
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, kind: str, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {"ln1": jnp.zeros((cfg.d_model,), dtype),
+                         "ln2": jnp.zeros((cfg.d_model,), dtype)}
+    if kind in (ATTN, LOCAL):
+        p["mixer"] = attn.attn_init(k1, cfg, dtype)
+    elif kind == RWKV:
+        p["mixer"] = rwkv_mod.rwkv_init(k1, cfg, dtype)
+    elif kind == RGLRU:
+        p["mixer"] = rglru_mod.rglru_init(k1, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if kind == RWKV:
+        p["ffn"] = rwkv_mod.chanmix_init(k2, cfg, dtype)
+    elif cfg.moe is not None:
+        p["ffn"] = moe_mod.moe_init(k2, cfg, dtype)
+    else:
+        p["ffn"] = L.mlp_init(k2, cfg, dtype=dtype)
+    return p
+
+
+def _theta(kind: str, cfg: ModelConfig) -> float:
+    if kind == ATTN and cfg.rope_theta_global:
+        return cfg.rope_theta_global
+    return cfg.rope_theta
+
+
+def _layer_apply(kind, p, x, positions, cfg, plan, cache, mode,
+                 rwkv_impl="scan"):
+    """One block: mixer + ffn with pre-norms. Returns (x, new_cache, aux)."""
+    aux = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    new_cache = None
+
+    if kind in (ATTN, LOCAL):
+        theta = _theta(kind, cfg)
+        q, k, v = attn.qkv_proj(p["mixer"], h, positions, cfg, plan, theta)
+        if mode == "decode":
+            idx = positions[0]
+            if kind == LOCAL:
+                new_cache, o = attn.decode_ring(cache, q, k, v, idx, cfg,
+                                                plan, cfg.attn_softcap)
+            else:
+                new_cache, o = attn.decode_global(cache, q, k, v, idx, cfg,
+                                                  plan, cfg.attn_softcap)
+        else:
+            window = cfg.window if kind == LOCAL else 0
+            o = attn.flash_attention(
+                q, k, v, causal=True, window=window, chunk=cfg.attn_chunk,
+                cap=cfg.attn_softcap)
+        mixed = attn.out_proj(p["mixer"], o, cfg, plan)
+    elif kind == RWKV:
+        mixed, new_cache = rwkv_mod.rwkv_apply(
+            p["mixer"], h, cfg, plan,
+            cache={"shift": cache["shift"], "state": cache["state"]}
+            if cache else None, impl=rwkv_impl)
+    elif kind == RGLRU:
+        mixed, new_cache = rglru_mod.rglru_apply(
+            p["mixer"], h, cfg, plan, cache=cache)
+    else:
+        raise ValueError(kind)
+
+    x = x + mixed
+    h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == RWKV:
+        f, cshift = rwkv_mod.chanmix_apply(
+            p["ffn"], h2, cfg, plan,
+            cache={"shift": cache["cshift"]} if cache else None)
+        if new_cache is not None:
+            new_cache = dict(new_cache, cshift=cshift["shift"])
+    elif cfg.moe is not None:
+        f, a, z = moe_mod.moe_apply(p["ffn"], h2, cfg, plan)
+        aux = (a, z)
+    else:
+        f = L.mlp_apply(p["ffn"], h2, cfg, plan)
+    return x + f, new_cache, aux
+
+
+def _layer_cache(kind, cfg, batch, max_seq, plan, dtype):
+    if kind == ATTN:
+        return attn.init_global_cache(cfg, batch, max_seq, plan, dtype)
+    if kind == LOCAL:
+        return attn.init_ring_cache(cfg, batch, plan, dtype)
+    if kind == RWKV:
+        return {
+            "shift": jnp.zeros((batch, 1, cfg.d_model), dtype),
+            "state": jnp.zeros((batch, cfg.n_heads, cfg.hd, cfg.hd),
+                               jnp.float32),
+            "cshift": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        }
+    if kind == RGLRU:
+        return {
+            "h": jnp.zeros((batch, cfg.d_model), jnp.float32),
+            "conv": jnp.zeros((batch, rglru_mod.CONV_W - 1, cfg.d_model),
+                              dtype),
+        }
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# full decoder
+# ---------------------------------------------------------------------------
+
+
+def init_decoder(key, cfg: ModelConfig, dtype=jnp.float32):
+    k_embed, k_units, k_rem, k_final = jax.random.split(key, 4)
+    params: Dict[str, Any] = {"embed": L.embed_init(k_embed, cfg, dtype)}
+
+    def unit_init(k):
+        ks = jax.random.split(k, len(cfg.unit))
+        return [
+            _layer_init(ks[i], kind, cfg, dtype)
+            for i, kind in enumerate(cfg.unit)
+        ]
+
+    if cfg.n_units > 0:
+        params["units"] = jax.vmap(unit_init)(
+            jax.random.split(k_units, cfg.n_units))
+    for i, kind in enumerate(cfg.remainder):
+        params[f"rem_{i}"] = _layer_init(
+            jax.random.fold_in(k_rem, i), kind, cfg, dtype)
+    params["final_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    return params
+
+
+def _unit_caches(cfg, batch, max_seq, plan, dtype):
+    def one_unit(_):
+        return [
+            _layer_cache(kind, cfg, batch, max_seq, plan, dtype)
+            for kind in cfg.unit
+        ]
+    if cfg.n_units == 0:
+        return None
+    caches = [one_unit(None) for _ in range(cfg.n_units)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               plan: ShardingPlan, dtype=jnp.bfloat16):
+    cache = {"units": _unit_caches(cfg, batch, max_seq, plan, dtype)}
+    for i, kind in enumerate(cfg.remainder):
+        cache[f"rem_{i}"] = _layer_cache(kind, cfg, batch, max_seq, plan,
+                                         dtype)
+    return cache
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig, plan: ShardingPlan):
+    """tokens (+ optional stub frontend embeddings) -> (B, S, D)."""
+    x = L.embed_apply(params["embed"], batch["tokens"], cfg, plan)
+    if cfg.frontend == "patch_stub" and "patches" in batch:
+        # [vlm]: precomputed patch embeddings prepended to the text tokens
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    return x
+
+
+def forward(params, batch, cfg: ModelConfig, plan: ShardingPlan, *,
+            mode: str = "train", rwkv_impl: str = "scan",
+            return_hidden: bool = False):
+    """Full-sequence forward (train / prefill). Returns (logits, aux), or
+    (normed hidden states, aux) when ``return_hidden`` (fused-loss path)."""
+    x = _embed_inputs(params, batch, cfg, plan)
+    B, S, D = x.shape
+    positions = jnp.arange(S)
+    aux_tot = jnp.zeros((2,), jnp.float32)
+
+    def unit_body(x, unit_params):
+        aux_u = jnp.zeros((2,), jnp.float32)
+        for i, kind in enumerate(cfg.unit):
+            x, _, aux = _layer_apply(kind, unit_params[i], x, positions,
+                                     cfg, plan, None, mode, rwkv_impl)
+            aux_u = aux_u + jnp.stack(aux)
+        return x, aux_u
+
+    if cfg.n_units > 0:
+        body = unit_body
+        if cfg.remat == "full" and mode == "train":
+            body = jax.checkpoint(
+                unit_body,
+                policy=jax.checkpoint_policies.nothing_saveable)
+        x, aux_units = jax.lax.scan(body, x, params["units"])
+        aux_tot = aux_tot + jnp.sum(aux_units, axis=0)
+
+    for i, kind in enumerate(cfg.remainder):
+        x, _, aux = _layer_apply(kind, params[f"rem_{i}"], x, positions,
+                                 cfg, plan, None, mode, rwkv_impl)
+        aux_tot = aux_tot + jnp.stack(aux)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    aux = {"moe_aux": aux_tot[0], "moe_z": aux_tot[1]}
+    if return_hidden:
+        return x, aux
+    logits = L.unembed_apply(params["embed"], x, cfg, plan,
+                             apply_softcap=(mode != "train"))
+    return logits, aux
+
+
+def decode_step(params, cache, token, index, cfg: ModelConfig,
+                plan: ShardingPlan):
+    """One-token decode. token: (B, 1) int32; index: scalar position.
+    Returns (logits (B,1,V), new_cache)."""
+    x = L.embed_apply(params["embed"], token, cfg, plan)
+    positions = jnp.full((1,), index, jnp.int32)
+
+    def unit_body(x, inp):
+        unit_params, unit_cache = inp
+        new_caches = []
+        for i, kind in enumerate(cfg.unit):
+            x, nc, _ = _layer_apply(kind, unit_params[i], x, positions,
+                                    cfg, plan, unit_cache[i], "decode")
+            new_caches.append(nc)
+        return x, new_caches
+
+    if cfg.n_units > 0:
+        x, new_unit_caches = jax.lax.scan(
+            unit_body, x, (params["units"], cache["units"]))
+    else:
+        new_unit_caches = None
+
+    new_cache = {"units": new_unit_caches}
+    for i, kind in enumerate(cfg.remainder):
+        x, nc, _ = _layer_apply(kind, params[f"rem_{i}"], x, positions,
+                                cfg, plan, cache[f"rem_{i}"], "decode")
+        new_cache[f"rem_{i}"] = nc
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed_apply(params["embed"], x, cfg, plan)
+    return logits, new_cache

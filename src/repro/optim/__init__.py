@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamW
+from repro.optim.adafactor import Adafactor
+from repro.optim.compress import int8_compress, int8_decompress
+
+OPTIMIZERS = {"adamw": AdamW, "adafactor": Adafactor}

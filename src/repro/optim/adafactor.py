@@ -1,0 +1,68 @@
+"""Adafactor (factored second moments) — the memory-frugal option for the
+trillion-parameter configs (Kimi-K2): O(rows+cols) optimizer state for
+matrices instead of O(rows*cols)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    lr: float = 1e-3
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+
+    def _factored(self, p):
+        return p.ndim >= 2
+
+    def init(self, params):
+        def stats(p):
+            if self._factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"stats": jax.tree.map(
+            stats, params, is_leaf=lambda x: isinstance(x, jax.Array)),
+            "count": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params, lr_scale=1.0):
+        c = state["count"] + 1
+        beta = 1.0 - c.astype(jnp.float32) ** -self.decay
+
+        def upd(g, st, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + self.eps
+            if self._factored(p):
+                vr = beta * st["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * st["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                    self.eps)
+                vhat = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+                step = g / jnp.sqrt(vhat + self.eps)
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta * st["v"] + (1 - beta) * g2
+                step = g / jnp.sqrt(v + self.eps)
+                new_st = {"v": v}
+            # update clipping (Adafactor's RMS rule)
+            rms = jnp.sqrt(jnp.mean(step * step) + self.eps)
+            step = step / jnp.maximum(1.0, rms / self.clip_threshold)
+            pf = p.astype(jnp.float32) - self.lr * lr_scale * step
+            return pf.astype(p.dtype), new_st
+
+        leaves = jax.tree.map(
+            upd, grads, state["stats"], params,
+            is_leaf=lambda x: isinstance(x, jax.Array) or (
+                isinstance(x, dict) and ("v" in x or "vr" in x)))
+        new_params = jax.tree.map(lambda o: o[0], leaves,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_stats = jax.tree.map(lambda o: o[1], leaves,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"stats": new_stats, "count": c}

@@ -1,0 +1,66 @@
+"""AdamW with bf16-param / f32-master support and pluggable clipping.
+
+Pure-functional: ``state = opt.init(params)``, ``params, state =
+opt.update(grads, state, params)``.  The f32 master copy lives in the
+optimizer state when ``params`` are low-precision; m/v are always f32.
+ZeRO-1 comes from sharding the state pytree (see train/step.py): the update
+math is elementwise so any sharding of the state is legal.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    master_weights: bool = True
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        state = {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+        if self.master_weights:
+            # jnp.array copies: the master must not alias the params buffer
+            # (donation would otherwise see the same buffer twice)
+            state["master"] = jax.tree.map(
+                lambda p: jnp.array(p, dtype=jnp.float32), params)
+        return state
+
+    def update(self, grads, state, params, lr_scale=1.0):
+        c = state["count"] + 1
+        b1c = 1.0 - self.b1 ** c.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** c.astype(jnp.float32)
+        masters = state.get("master", params)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            step = (m / b1c) / (jnp.sqrt(v / b2c) + self.eps)
+            pf = p.astype(jnp.float32)
+            pf = pf - self.lr * lr_scale * (step + self.weight_decay * pf)
+            return m, v, pf
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], masters)
+        m = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_master = jax.tree.map(lambda o: o[2], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree.map(
+            lambda nm, p: nm.astype(p.dtype), new_master, params)
+        new_state = {"m": m, "v": v, "count": c}
+        if self.master_weights:
+            new_state["master"] = new_master
+        return new_params, new_state

@@ -1,0 +1,31 @@
+"""int8 gradient compression with stochastic rounding — an optional
+distributed-optimization trick: gradients are quantized before the cross-
+replica combine (4x ICI bytes saved) and dequantized after.  The scale is a
+per-tensor max-abs (one cheap reduction)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress(key, tree):
+    """Returns ({'q': int8, 'scale': f32} per leaf, new_key)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves) + 1)
+
+    def comp(k, g):
+        g = g.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        x = g / scale
+        noise = jax.random.uniform(k, g.shape, jnp.float32) - 0.5
+        q = jnp.clip(jnp.round(x + noise), -127, 127).astype(jnp.int8)
+        return {"q": q, "scale": scale}
+
+    out = [comp(keys[i], g) for i, g in enumerate(leaves)]
+    return jax.tree.unflatten(treedef, out), keys[-1]
+
+
+def int8_decompress(ctree):
+    return jax.tree.map(
+        lambda c: c["q"].astype(jnp.float32) * c["scale"],
+        ctree, is_leaf=lambda x: isinstance(x, dict) and "q" in x)

@@ -1,0 +1,5 @@
+from repro.train.step import (
+    TrainState, make_prefill_step, make_serve_step, make_train_step,
+    train_state_specs,
+)
+from repro.train.loop import fit

@@ -1,0 +1,215 @@
+"""Step factories: train_step (grad + robust clip + optimizer), prefill_step
+and serve_step — the functions that get pjit'd and dry-run compiled.
+
+The paper's technique is a first-class training feature here:
+``clip='quantile'`` clips gradient magnitudes at their global q-quantile via
+the cutting-plane selector running over the *sharded* gradient pytree —
+``maxit`` fused passes + all-reduces of four scalars each, no gather
+(core.robust.clip_by_quantile).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, ShardingPlan
+from repro.core import robust
+from repro.models import model
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.step), None
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten,
+    lambda aux, children: TrainState(*children))
+
+
+def _loss_from_batch(params, batch, cfg: ModelConfig, plan: ShardingPlan,
+                     rwkv_impl: str):
+    """Fused-unembed chunked CE: full logits are never materialized."""
+    hidden, aux = model.forward(params, batch, cfg, plan, mode="train",
+                                rwkv_impl=rwkv_impl, return_hidden=True)
+    tokens = batch["tokens"]
+    if cfg.frontend == "patch_stub" and "patches" in batch:
+        n_img = batch["patches"].shape[1]
+        hidden = hidden[:, n_img:]
+    loss, metrics = model.lm_loss_fused(
+        hidden[:, :-1], params["embed"], tokens[:, 1:],
+        jnp.ones_like(tokens[:, 1:]), cfg, plan)
+    if cfg.moe is not None:
+        loss = loss + (cfg.moe.router_aux_weight * aux["moe_aux"]
+                       + cfg.moe.router_z_weight * aux["moe_z"])
+        metrics = dict(metrics, moe_aux=aux["moe_aux"], moe_z=aux["moe_z"])
+    return loss, metrics
+
+
+def make_train_step(cfg: ModelConfig, plan: ShardingPlan, optimizer, *,
+                    clip: str = "quantile", clip_q: float = 0.99,
+                    clip_maxit: int = 12, rwkv_impl: str = "scan",
+                    accum_steps: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``accum_steps > 1`` enables gradient accumulation: the global batch is
+    split into microbatches scanned sequentially (activation memory scales
+    down by the factor; grads accumulate in f32).
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(_loss_from_batch, has_aux=True)(
+            params, batch, cfg, plan, rwkv_impl)
+
+    def accum_grads(params, batch):
+        if accum_steps <= 1:
+            return grads_of(params, batch)
+
+        def split(x):
+            b = x.shape[0]
+            assert b % accum_steps == 0, (b, accum_steps)
+            return x.reshape((accum_steps, b // accum_steps) + x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def mb_step(carry, mb):
+            loss_a, metrics_a, g_a = carry
+            (loss, metrics), g = grads_of(params, mb)
+            g_a = jax.tree.map(
+                lambda a, b_: a + b_.astype(jnp.float32), g_a, g)
+            metrics_a = jax.tree.map(lambda a, b_: a + b_, metrics_a, metrics)
+            return (loss_a + loss, metrics_a, g_a), None
+
+        zeros_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        mb0 = jax.tree.map(lambda x: x[0], micro)
+        zero_metrics = jax.tree.map(
+            lambda s: jnp.zeros((), jnp.float32),
+            jax.eval_shape(lambda p, b: grads_of(p, b)[0][1], params, mb0))
+        (loss, metrics, grads), _ = jax.lax.scan(
+            mb_step, (jnp.zeros(()), zero_metrics, zeros_g), micro)
+        inv = 1.0 / accum_steps
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        metrics = jax.tree.map(lambda v: v * inv, metrics)
+        return (loss * inv, metrics), grads
+
+    def train_step(state: TrainState, batch):
+        (loss, metrics), grads = accum_grads(state.params, batch)
+
+        if clip == "quantile":
+            grads, thr = robust.clip_by_quantile(grads, clip_q,
+                                                 maxit=clip_maxit)
+            metrics = dict(metrics, clip_thr=thr)
+        elif clip == "quantile_hist":
+            # 2-pass histogram variant (§Perf): ~1.8% bin resolution,
+            # 2 gradient sweeps instead of maxit
+            thr = jnp.maximum(robust.hist_quantile(grads, clip_q), 1e-8)
+            grads = jax.tree.map(
+                lambda g: jnp.clip(g, -thr.astype(g.dtype),
+                                   thr.astype(g.dtype)), grads)
+            metrics = dict(metrics, clip_thr=thr)
+        elif clip == "global_norm":
+            gn = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, 1.0 / jnp.maximum(gn, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+            metrics = dict(metrics, grad_norm=gn)
+        elif clip != "none":
+            raise ValueError(clip)
+
+        params, opt = optimizer.update(grads, state.opt, state.params)
+        metrics = dict(metrics, loss=loss)
+        return TrainState(params=params, opt=opt, step=state.step + 1), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, plan: ShardingPlan,
+                      rwkv_impl: str = "scan"):
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, batch, cfg, plan, mode="prefill",
+                                  rwkv_impl=rwkv_impl)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, plan: ShardingPlan):
+    """One-token decode: (params, cache, token, index) -> (next_token,
+    logits, new_cache) — greedy argmax sampling."""
+
+    def serve_step(params, cache, token, index):
+        logits, new_cache = model.decode_step(params, cache, token, index,
+                                              cfg, plan)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# sharding of the train state (ZeRO-1: opt state over data axis where legal)
+# ---------------------------------------------------------------------------
+
+
+def _zero1_spec(spec: P, leaf, plan: ShardingPlan) -> P:
+    """Extend a param spec with the data axis on the largest unsharded dim
+    (ZeRO-1).  Only when the dim is divisible by the axis size."""
+    if plan.mesh is None or not plan.dp_axes:
+        return spec
+    axis = plan.dp_axes[-1]  # 'data'
+    size = plan.mesh.shape[axis]
+    parts = list(spec) + [None] * (leaf.ndim - len(spec))
+    used = {a for p_ in parts if p_ is not None
+            for a in ((p_,) if isinstance(p_, str) else p_)}
+    if axis in used:  # already sharded over data (fsdp) — nothing to add
+        return spec
+    best, best_dim = -1, -1
+    for i, (p_, d) in enumerate(zip(parts, leaf.shape)):
+        if p_ is None and d % size == 0 and d > best:
+            best, best_dim = d, i
+    if best_dim < 0:
+        return spec
+    parts[best_dim] = axis
+    return P(*parts)
+
+
+def train_state_specs(state: TrainState, cfg: ModelConfig,
+                      plan: ShardingPlan, *, zero1: bool = True):
+    """PartitionSpec pytree for the full TrainState."""
+    pspecs = model.param_specs(state.params, cfg, plan)
+
+    def opt_entry(subtree_params_specs, subtree):
+        # m/v/master mirror the param structure
+        return subtree_params_specs
+
+    opt_specs = {}
+    for k, sub in state.opt.items():
+        if k in ("count",):
+            opt_specs[k] = P()
+        elif k in ("m", "v", "master"):
+            if zero1:
+                opt_specs[k] = jax.tree.map(
+                    lambda s, l: _zero1_spec(s, l, plan), pspecs,
+                    state.opt[k])
+            else:
+                opt_specs[k] = pspecs
+        elif k == "stats":  # adafactor
+            def sspec(path, leaf):
+                return P()
+            opt_specs[k] = jax.tree_util.tree_map_with_path(
+                sspec, state.opt[k])
+        else:
+            opt_specs[k] = jax.tree.map(lambda _: P(), state.opt[k])
+    return TrainState(params=pspecs, opt=opt_specs, step=P())

@@ -1,0 +1,83 @@
+"""Tests for the roofline analysis (HLO walker) and param counting."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import param_counts, roofline_terms
+from repro.analysis.roofline import hlo_cost
+from repro.configs import get_config
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_hlo_cost_counts_scan_trips():
+    """The walker must multiply scan-body flops by the trip count."""
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def f(x, ws):
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    n, d, trips = 64, 64, 10
+    x = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    ws = jax.ShapeDtypeStruct((trips, d, d), jnp.float32)
+    comp = jax.jit(f).lower(x, ws).compile()
+    raw = comp.cost_analysis()["flops"]
+    walked = hlo_cost(comp.as_text())
+    expect = 2 * n * d * d * trips
+    assert walked["flops_dot"] == pytest.approx(expect, rel=0.01)
+    # raw counts the body once — the whole point of the walker
+    assert raw < walked["flops_dot"]
+
+
+def test_hlo_cost_nested_scan():
+    def inner(x, w):
+        return x @ w, None
+
+    def outer(x, ws):
+        def step(c, w):
+            y, _ = jax.lax.scan(inner, c, ws)
+            return y, None
+        y, _ = jax.lax.scan(step, x, jnp.arange(3.0))
+        return y
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 32, 32), jnp.float32)
+    comp = jax.jit(outer).lower(x, ws).compile()
+    walked = hlo_cost(comp.as_text())
+    expect = 2 * 32 * 32 * 32 * 5 * 3  # inner trips x outer trips
+    assert walked["flops_dot"] == pytest.approx(expect, rel=0.01)
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms({
+        "flops_per_device": 197e12,       # exactly 1s of compute
+        "bytes_per_device": 819e9 * 0.1,  # 0.1s memory
+        "collective_bytes_per_device": 50e9 * 0.5,
+    })
+    assert t["dominant"] == "compute"
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(0.1)
+    assert t["collective_s"] == pytest.approx(0.5)
+
+
+def test_param_counts_moe_active():
+    cfg = get_config("mixtral-8x7b")
+    from repro.launch import inputs as I
+    shapes = I.params_shapes(cfg)
+    total, active = param_counts(shapes, cfg)
+    # mixtral-8x7b: ~47B total, ~13B active (2 of 8 experts)
+    assert 4.4e10 < total < 5.2e10, total
+    assert 1.1e10 < active < 1.5e10, active
+
+
+def test_param_counts_kimi_scale():
+    cfg = get_config("kimi-k2-1t-a32b")
+    from repro.launch import inputs as I
+    shapes = I.params_shapes(cfg)
+    total, active = param_counts(shapes, cfg)
+    assert total > 0.95e12, f"kimi should be ~1T params, got {total:.3e}"
+    assert active < 0.05 * total  # top-8 of 384 experts

@@ -1,0 +1,61 @@
+"""Distributed-selection tests.
+
+The multi-device checks run in a subprocess so that this pytest process
+keeps the default single CPU device (required by the smoke tests / benches).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import distributed
+
+jax.config.update("jax_platform_name", "cpu")
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_single_device_mesh_path():
+    """shard_map path with a 1-device mesh (API-level sanity)."""
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal(10_000).astype(np.float32)
+    k = 2500
+    res = distributed.sharded_order_statistic(jnp.asarray(x), k, mesh,
+                                              P("data"))
+    assert np.float32(res.value) == np.partition(x, k - 1)[k - 1]
+
+
+def test_across_axis_single_device():
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(2)
+    v = rng.standard_normal((1, 17)).astype(np.float32)
+
+    def run(vl):
+        return distributed.median_across_axis(vl, "data", method="cp")
+
+    got = jax.shard_map(run, mesh=mesh, in_specs=P("data"),
+                        out_specs=P("data"))(jnp.asarray(v))
+    np.testing.assert_allclose(np.asarray(got)[0], v[0])
+
+
+@pytest.mark.parametrize("n_dev", [4, 8])
+def test_multi_device_subprocess(n_dev):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "_dist_worker.py"),
+         str(n_dev)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "OK" in out.stdout

@@ -1,0 +1,91 @@
+"""Hypothesis property tests for the system's core invariants.
+
+Note: float values are generated from integer strategies (scaled) because
+XLA:CPU enables FTZ/fast-math processor flags, which trips hypothesis's
+strict float-bound validation. Integer-derived floats also maximize tie
+coverage, the hardest case for selection.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import selection
+from repro.core.objective import eval_fg
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def to_f32(ints, scale_exp=0):
+    x = np.asarray(ints, np.float64) * (2.0 ** (scale_exp - 10))
+    return x.astype(np.float32)
+
+
+ints_small = st.lists(st.integers(-(2**20), 2**20), min_size=1, max_size=300)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    ints=ints_small,
+    scale_exp=st.integers(min_value=-20, max_value=60),
+    kf=st.integers(min_value=0, max_value=1000),
+    method=st.sampled_from(["cp", "bisection"]),
+)
+def test_order_statistic_matches_partition(ints, scale_exp, kf, method):
+    x = to_f32(ints, scale_exp)
+    n = x.size
+    k = max(1, min(n, 1 + (kf * n) // 1001))
+    expected = np.partition(x, k - 1)[k - 1]
+    res = selection.order_statistic(
+        jnp.asarray(x), k, method=method, maxit=256, cap=8
+    )
+    np.testing.assert_equal(np.float32(res.value), expected)
+
+
+@settings(max_examples=40, deadline=None)
+@given(ints=ints_small, scale_exp=st.integers(min_value=-20, max_value=40))
+def test_median_permutation_invariance_and_membership(ints, scale_exp):
+    x = to_f32(ints, scale_exp)
+    v = np.float32(selection.median(jnp.asarray(x)).value)
+    rng = np.random.default_rng(0)
+    xp = x.copy(); rng.shuffle(xp)
+    assert np.float32(selection.median(jnp.asarray(xp)).value) == v
+    # the median is an element of the sample
+    assert v in x
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    ints=st.lists(st.integers(-(2**14), 2**14), min_size=2, max_size=200),
+    kf=st.integers(min_value=0, max_value=1000),
+)
+def test_subgradient_certificate_iff(ints, kf):
+    """0 in [g_lo,g_hi] at y iff y == x_(k) — on arbitrary data."""
+    x = to_f32(ints)
+    n = x.size
+    k = max(1, min(n, 1 + (kf * n) // 1001))
+    xk = np.partition(x, k - 1)[k - 1]
+    fg = eval_fg(jnp.asarray(x), jnp.float32(xk), k)
+    assert float(fg.g_lo) <= 0.0 <= float(fg.g_hi)
+    for v in np.unique(x)[:5]:
+        if v != xk:
+            fg2 = eval_fg(jnp.asarray(x), jnp.float32(v), k)
+            assert not (float(fg2.g_lo) <= 0.0 <= float(fg2.g_hi))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    ints=st.lists(st.integers(0, 2**30), min_size=4, max_size=256),
+    scale_exp=st.integers(min_value=0, max_value=40),
+)
+def test_log_transform_guard(ints, scale_exp):
+    """Monotone-transform selection stays exact on huge-range data."""
+    x = to_f32(ints, scale_exp)
+    n = x.size
+    k = (n + 1) // 2
+    expected = np.partition(x, k - 1)[k - 1]
+    res = selection.order_statistic(jnp.asarray(x), k, transform="log1p",
+                                    maxit=128, cap=8)
+    np.testing.assert_equal(np.float32(res.value), expected)

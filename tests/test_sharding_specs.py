@@ -1,0 +1,113 @@
+"""Unit tests for the sharding-rule layer (param/cache specs, plans).
+
+These are pure-metadata tests (no device mesh needed beyond construction):
+every spec must be structurally valid — each mesh axis at most once, every
+sharded dim divisible by its axis product.
+"""
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.launch import inputs as I
+from repro.launch.mesh import make_plan, make_production_mesh
+from repro.models import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # metadata-only 16x16 mesh over the single CPU device (AbstractMesh-like
+    # construction is enough for spec validation; nothing is compiled here)
+    import jax.sharding as js
+    devs = np.array(jax.devices() * 256).reshape(16, 16)
+    return js.Mesh(devs, ("data", "model"),
+                   axis_types=(js.AxisType.Auto,) * 2)
+
+
+def _axes_of(spec):
+    for entry in spec:
+        if entry is None:
+            continue
+        if isinstance(entry, str):
+            yield entry
+        else:
+            yield from entry
+
+
+def check_specs(shapes_tree, specs_tree, mesh):
+    flat_s = jax.tree.leaves(shapes_tree)
+    flat_p = jax.tree.leaves(
+        specs_tree, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_s) == len(flat_p)
+    for leaf, spec in zip(flat_s, flat_p):
+        # no duplicate axes in one spec
+        axes = list(_axes_of(spec))
+        assert len(axes) == len(set(axes)), (spec, leaf.shape)
+        # divisibility for every sharded dim
+        parts = list(spec) + [None] * (leaf.ndim - len(spec))
+        for d, entry in zip(leaf.shape, parts):
+            if entry is None:
+                continue
+            size = 1
+            for a in ((entry,) if isinstance(entry, str) else entry):
+                size *= mesh.shape[a]
+            assert d % size == 0, (spec, leaf.shape)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_valid_all_archs(arch, mesh):
+    cfg = get_config(arch)
+    plan = make_plan(cfg, SHAPES["train_4k"], mesh)
+    shapes = I.params_shapes(cfg)
+    specs = model.param_specs(shapes, cfg, plan)
+    check_specs(shapes, specs, mesh)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_valid(arch, shape_name, mesh):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        pytest.skip("long_500k: full-attention arch")
+    plan = make_plan(cfg, shape, mesh)
+    cshapes = I.cache_shapes(cfg, shape, plan)
+    cspecs = model.cache_specs(cshapes, cfg, plan)
+    check_specs(cshapes, cspecs, mesh)
+
+
+def test_long_context_plan_uses_seq_axes(mesh):
+    cfg = get_config("gemma3-27b")
+    plan = make_plan(cfg, SHAPES["long_500k"], mesh)
+    assert plan.seq_axes == ("data", "model")
+    assert plan.dp_axes == ()
+
+
+def test_fsdp_plan_requires_non_moe(mesh):
+    with pytest.raises(AssertionError):
+        make_plan(get_config("mixtral-8x7b"), SHAPES["train_4k"], mesh,
+                  strategy="fsdp")
+    plan = make_plan(get_config("gemma2-2b"), SHAPES["train_4k"], mesh,
+                     strategy="fsdp")
+    assert plan.tp_axis is None and plan.fsdp_axis == ("data", "model")
+
+
+def test_zero1_sharding_extends_opt_state(mesh):
+    from repro.train.step import train_state_specs
+    cfg = get_config("phi3-mini-3.8b")  # fsdp off: zero1 has room to act
+    plan = make_plan(cfg, SHAPES["train_4k"], mesh)
+    opt = I.pick_optimizer(cfg)
+    state = I.state_shapes(cfg, opt)
+    specs = train_state_specs(state, cfg, plan)
+    # at least one m-state leaf gains a 'data' axis beyond its param spec
+    pl = jax.tree.leaves(specs.params, is_leaf=lambda x: isinstance(x, P))
+    ml = jax.tree.leaves(specs.opt["m"], is_leaf=lambda x: isinstance(x, P))
+    gained = sum(
+        1 for ps, ms in zip(pl, ml)
+        if "data" in list(_axes_of(ms)) and "data" not in list(_axes_of(ps)))
+    assert gained > 0
+    check_specs(state.opt["m"], specs.opt["m"], mesh)
