@@ -1,0 +1,75 @@
+"""Batched engine vs vmap-of-scalar-solver vs jnp.sort over a (B, n) grid.
+
+The tentpole claim of the batched-first refactor: one engine iterating a
+(B,) state block beats B lock-stepped scalar solvers (``jax.vmap`` of the
+public scalar API — exactly how the pre-refactor hot paths ran) and the
+full-sort baseline, while staying bit-identical to ``np.partition`` row-wise.
+
+Emits the usual CSV rows plus one ``BENCH_JSON`` line (machine-readable
+perf-trajectory record: every configuration with us/call for all three
+implementations and the batched/vmap speedup).
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import selection
+
+
+def run(full: bool = False):
+    grid_b = [1, 8, 64] + ([256] if full else [])
+    grid_n = [1 << 12, 1 << 16] + ([1 << 20] if full else [])
+    rng = np.random.default_rng(0)
+    rows, records = [], []
+    for n in grid_n:
+        for b in grid_b:
+            x = rng.standard_normal((b, n)).astype(np.float32)
+            xj = jnp.asarray(x)
+            k = (n + 1) // 2
+            want = np.partition(x, k - 1, axis=1)[:, k - 1]
+
+            vmapped = jax.jit(jax.vmap(
+                lambda xi: selection.order_statistic(xi, k).value))
+            batched = jax.jit(
+                lambda v: selection.select_rows(v, k).value)
+            sort = jax.jit(lambda v: jnp.sort(v, axis=1)[:, k - 1])
+
+            impls = {"vmap_scalar": vmapped, "batched": batched,
+                     "sort": sort}
+            times = {}
+            for name, fn in impls.items():
+                got = np.asarray(fn(xj))
+                assert np.array_equal(got, want), (name, b, n)
+                times[name] = timeit(fn, xj, reps=3)
+
+            res = selection.select_rows(xj, k)
+            iters = int(jnp.max(res.iters))
+            speedup = times["vmap_scalar"] / times["batched"]
+            for name, t in times.items():
+                rows.append((
+                    f"{name}/B={b}/n={n}", t * 1e6,
+                    f"{b * n / t / 1e6:.1f}Melem/s",
+                ))
+            rows.append((f"speedup_batched_over_vmap/B={b}/n={n}",
+                         speedup, f"iters={iters}"))
+            records.append(dict(
+                B=b, n=n, k=k, iters=iters,
+                us_vmap=times["vmap_scalar"] * 1e6,
+                us_batched=times["batched"] * 1e6,
+                us_sort=times["sort"] * 1e6,
+                speedup_batched_over_vmap=speedup,
+            ))
+    emit(rows)
+    print("BENCH_JSON " + json.dumps(
+        {"bench": "batched_selection", "exact": True, "grid": records}))
+    return rows
+
+
+if __name__ == "__main__":
+    run(full=False)

@@ -1,6 +1,7 @@
 """Benchmark harness entry point — one bench per paper table/figure.
 
   selection_bench      Tables I/II (method x size x dtype)
+  batched_selection    batched engine vs vmap-of-scalar vs sort, (B, n) grid
   distribution_bench   Sec. V-C (nine distributions)
   outlier_bench        Sec. V-D / Fig. 5 (extreme values)
   hybrid_breakdown     Sec. IV (CP iterations vs pivot-interval handoff)
@@ -29,6 +30,7 @@ def main() -> None:
     jax.config.update("jax_enable_x64", True)
 
     from benchmarks import (
+        batched_selection_bench,
         clip_bench,
         distribution_bench,
         hybrid_breakdown_bench,
@@ -40,6 +42,7 @@ def main() -> None:
 
     benches = {
         "selection": selection_bench,
+        "batched_selection": batched_selection_bench,
         "distribution": distribution_bench,
         "outlier": outlier_bench,
         "hybrid": hybrid_breakdown_bench,

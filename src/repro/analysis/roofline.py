@@ -298,6 +298,8 @@ def analyze_compiled(compiled, *, n_devices: int) -> Dict:
     cost_analysis values are kept as ``*_raw`` for reference.
     """
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # pre-0.5 jax wraps the dict in a list
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     text = compiled.as_text()
     walk = hlo_cost(text)

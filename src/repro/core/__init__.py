@@ -1,5 +1,22 @@
-"""Core: selection-by-convex-minimization (Beliakov 2011) + robust stats."""
-from repro.core.objective import FG, eval_fg, eval_partials, fg_from_partials, os_weights
+"""Core: selection-by-convex-minimization (Beliakov 2011) + robust stats.
+
+Batched-first: the engine solves (B,) selection problems per bracket loop;
+``order_statistic`` is the B=1 view, ``select_rows`` the rows regime,
+``multi_order_statistic``/``quantiles`` the shared-x regime.  Data access
+goes through the ``Evaluator`` protocol (see ``repro.core.objective``).
+"""
+from repro.core.objective import (
+    FG,
+    Evaluator,
+    FnEvaluator,
+    RowsEvaluator,
+    SharedEvaluator,
+    ShardedEvaluator,
+    eval_fg,
+    eval_partials,
+    fg_from_partials,
+    os_weights,
+)
 from repro.core.selection import (
     EXACT_HIT,
     HYBRID_SORT,
@@ -8,13 +25,20 @@ from repro.core.selection import (
     SelectResult,
     TIE_FALLBACK,
     median,
+    multi_order_statistic,
     order_statistic,
     quantile,
+    quantiles,
+    select_rows,
     topk_threshold,
 )
 
 __all__ = [
     "FG", "eval_fg", "eval_partials", "fg_from_partials", "os_weights",
-    "SelectResult", "order_statistic", "median", "quantile", "topk_threshold",
+    "Evaluator", "FnEvaluator", "RowsEvaluator", "SharedEvaluator",
+    "ShardedEvaluator",
+    "SelectResult", "order_statistic", "select_rows",
+    "multi_order_statistic", "quantiles", "median", "quantile",
+    "topk_threshold",
     "METHODS", "EXACT_HIT", "HYBRID_SORT", "TIE_FALLBACK", "NOT_CONVERGED",
 ]

@@ -19,6 +19,13 @@ Two primitives, both ``shard_map``-native:
   ``all_gather`` + local sort is cheaper in ICI bytes (crossover benchmarked
   in ``benchmarks/``); both methods are provided.
 
+Both primitives ride the batched-first selection engine: the psum combine is
+just another :class:`~repro.core.objective.Evaluator`.  The 1-D primitive
+wraps a ``ShardedEvaluator`` (local fused pass + psum of four scalars); the
+across-axis primitive builds an :func:`axis_evaluator` whose batch dimension
+is the coordinate set and hands it to ``selection.bracket_loop_batched`` —
+the same loop that runs rows-mode and shared-x selection on a single device.
+
 Every function here must be called INSIDE ``shard_map`` (they take the mesh
 axis name(s)).  ``sharded_order_statistic`` is the user-facing wrapper.
 """
@@ -31,9 +38,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import selection
-from repro.core.objective import FG, fg_from_partials, os_weights
-from repro.kernels import ops as kops
+from repro.core import _compat, selection
+from repro.core.objective import (
+    FG,
+    FnEvaluator,
+    ShardedEvaluator,
+    os_weights,
+)
 
 AxisNames = Sequence[str] | str
 
@@ -54,13 +65,26 @@ def _pmin(v, axes):
     return jax.lax.pmin(v, axes)
 
 
+def _pcast_varying(v, axes_t):
+    # jax >= 0.7 wants device-varying values marked explicitly for the
+    # static varying-axis analysis; older versions have no pcast (and no
+    # analysis), where the cast is a no-op.
+    pcast = getattr(jax.lax, "pcast", None)
+    return v if pcast is None else pcast(v, axes_t, to="varying")
+
+
 def eval_fg_sharded(x_local, y, k, n_global, axes, *, backend=None) -> FG:
-    """Fused local pass + psum of the 4 additive partials."""
-    sp, sn, lt, le = kops.fused_partials(x_local, y, backend=backend)
-    fsum = _psum(jnp.stack([sp, sn]), axes)
-    csum = _psum(jnp.stack([lt, le]), axes)
-    return fg_from_partials((fsum[0], fsum[1], csum[0], csum[1]),
-                            n_global, k)
+    """Fused local pass + psum combine — one ShardedEvaluator call.
+
+    ``n_global`` overrides the psum-derived element count (callers that pad
+    shards to equal size pass the true count so the weights stay honest);
+    ``None`` derives it from the shards.
+    """
+    ev = ShardedEvaluator(x_local, k, axes, backend=backend)
+    if n_global is not None:
+        ev.n = jnp.asarray(n_global, jnp.int32)
+        ev.k = jnp.clip(jnp.asarray(k, jnp.int32), 1, ev.n)
+    return ev(y)
 
 
 class _DistState(NamedTuple):
@@ -96,15 +120,14 @@ def local_order_statistic(
     """
     x_local = x_local.reshape(-1)
     n_local = x_local.size
-    n = _psum(jnp.asarray(n_local, jnp.int32), axes)
-    kk = jnp.clip(jnp.asarray(k, jnp.int32), 1, n)
+    # the evaluator owns the data layout: local fused pass (Pallas on TPU)
+    # + psum of the four additive partials is the whole multi-device story
+    ev = ShardedEvaluator(x_local, k, axes, backend=backend)
+    n, kk = ev.n, ev.k
     dtype = x_local.dtype
-
-    xmin = _pmin(jnp.min(x_local), axes)
-    xmax = _pmax(jnp.max(x_local), axes)
-    xsum = _psum(jnp.sum(x_local, dtype=dtype), axes)
     nf = n.astype(dtype)
-    xmean = xsum / nf
+
+    xmin, xmax, xmean = ev.init_stats()
     alpha, beta = os_weights(nf, kk, dtype)
 
     s0 = _DistState(
@@ -114,10 +137,10 @@ def local_order_statistic(
         yR=xmax,
         fR=alpha * (xmax - xmean),
         gR=alpha * (nf - 1.0) / nf - beta * (1.0 / nf),
-        loc_cleL=jax.lax.pcast(jnp.asarray(0, jnp.int32),
-                               _axes_tuple(axes), to="varying"),
-        loc_cleR=jax.lax.pcast(jnp.asarray(n_local, jnp.int32),
-                               _axes_tuple(axes), to="varying"),
+        loc_cleL=_pcast_varying(jnp.asarray(0, jnp.int32),
+                                _axes_tuple(axes)),
+        loc_cleR=_pcast_varying(jnp.asarray(n_local, jnp.int32),
+                                _axes_tuple(axes)),
         max_in=jnp.asarray(n_local, jnp.int32),
         t_exact=jnp.asarray(jnp.nan, dtype),
         found_exact=jnp.asarray(False),
@@ -132,11 +155,10 @@ def local_order_statistic(
         t = (s.fR - s.fL + s.yL * s.gL - s.yR * s.gR) / (s.gL - s.gR)
         bad = ~jnp.isfinite(t) | (t <= s.yL) | (t >= s.yR)
         t = jnp.where(bad, 0.5 * (s.yL + s.yR), t).astype(dtype)
-        sp, sn, lt_loc, le_loc = kops.fused_partials(x_local, t,
-                                                     backend=backend)
-        fsum = _psum(jnp.stack([sp, sn]), axes)
-        csum = _psum(jnp.stack([lt_loc, le_loc]), axes)
-        fg = fg_from_partials((fsum[0], fsum[1], csum[0], csum[1]), n, kk)
+        # local partials kept un-psum'd too: the stopping rule bounds the
+        # PER-SHARD in-bracket count so the local compaction never overflows
+        sp, sn, lt_loc, le_loc = ev.local_partials(t)
+        fg = ev.combine((sp, sn, lt_loc, le_loc))
         exact = (fg.n_lt < kk) & (kk <= fg.n_le)
         move_left = fg.g_hi < 0
         loc_cleL = jnp.where(move_left, le_loc, s.loc_cleL)
@@ -218,12 +240,12 @@ def sharded_order_statistic(
     )
 
     @functools.partial(
-        jax.shard_map, mesh=mesh, in_specs=(in_spec,),
+        _compat.shard_map, mesh=mesh, in_specs=(in_spec,),
         out_specs=jax.tree.map(lambda _: P(), selection.SelectResult(
             *(0,) * 6)),
         # outputs are semantically replicated (built from psum/all_gather
         # results), but the static varying-axis analysis cannot prove it
-        check_vma=False,
+        check=False,
     )
     def run(x_local):
         return local_order_statistic(x_local, k, axes, **kwargs)
@@ -247,17 +269,33 @@ def sharded_quantile(x, q, mesh, in_spec, **kw):
 # ---------------------------------------------------------------------------
 
 
-class _VecState(NamedTuple):
-    yL: jax.Array
-    fL: jax.Array
-    gL: jax.Array
-    yR: jax.Array
-    fR: jax.Array
-    gR: jax.Array
-    cleL: jax.Array
-    ans: jax.Array
-    done: jax.Array
-    it: jax.Array
+def axis_evaluator(v_local: jax.Array, k, axes: AxisNames) -> FnEvaluator:
+    """Evaluator for coordinate-wise selection ACROSS a mesh axis.
+
+    The batch dimension is the coordinate set (this shard's array shape S);
+    each coordinate's data is the ``n_rep`` replica values living one per
+    device along ``axes``.  The psum combine of the four additive partials
+    is the whole communication story — per iteration the wire carries four
+    S-shaped vectors, never the replica data.
+    """
+    axes_t = _axes_tuple(axes)
+    v = v_local.astype(jnp.float32)
+    n_rep = _psum(jnp.asarray(1, jnp.int32), axes_t)
+    kk = jnp.broadcast_to(jnp.clip(jnp.asarray(k, jnp.int32), 1, n_rep),
+                          v.shape)
+
+    def partials(y):
+        d = v - y
+        return (_psum(jnp.maximum(d, 0), axes_t),
+                _psum(jnp.maximum(-d, 0), axes_t),
+                _psum((d < 0).astype(jnp.int32), axes_t),
+                _psum((d <= 0).astype(jnp.int32), axes_t))
+
+    def init_stats():
+        return (_pmin(v, axes_t), _pmax(v, axes_t),
+                _psum(v, axes_t) / n_rep.astype(jnp.float32))
+
+    return FnEvaluator(partials, n_rep, kk, init_stats)
 
 
 def order_statistic_across_axis(
@@ -278,12 +316,13 @@ def order_statistic_across_axis(
     robust gradient aggregation.
 
     method='gather' all-gathers the replica dimension and sorts locally
-    (cheapest for small replica counts); method='cp' runs the vectorized
-    cutting-plane solver with per-coordinate psum reductions and O(1) memory
+    (cheapest for small replica counts); method='cp' runs the batched
+    selection engine (``selection.bracket_loop_batched``) over an
+    :func:`axis_evaluator` — per-coordinate psum reductions, O(1) memory
     (the paper's method, for when the replica dimension is large or memory
     is tight).  'auto' picks by replica count.
     """
-    axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+    axes_t = _axes_tuple(axes)
     n_rep = _psum(jnp.asarray(1, jnp.int32), axes_t)
 
     if method == "auto":
@@ -301,80 +340,35 @@ def order_statistic_across_axis(
     if method != "cp":
         raise ValueError(f"unknown method {method!r}")
 
-    shape = v_local.shape
     v = v_local.astype(jnp.float32)
-    kk = jnp.asarray(k, jnp.int32)
-    nf = n_rep.astype(jnp.float32)
-    alpha = (nf - kk + 0.5) / nf
-    beta = (kk - 0.5) / nf
+    ev = axis_evaluator(v_local, k, axes_t)
+    kk = ev.k
 
-    def psum_(a):
-        return _psum(a, axes_t)
+    # pre-seed coordinates whose answer sits at the extremes (incl. k==1,
+    # k==n_rep and all-equal coordinates): they can never exact-hit at an
+    # interior pivot, so certify them before the loop and keep them frozen
+    yL0, yR0, _ = ev.init_stats()
+    cle_min = _psum((v <= yL0).astype(jnp.int32), axes_t)
+    clt_max = _psum((v < yR0).astype(jnp.int32), axes_t)
+    at_min = cle_min >= kk
+    at_max = clt_max < kk
+    found0 = at_min | at_max
+    t0 = jnp.where(at_min, yL0, jnp.where(at_max, yR0, jnp.nan))
 
-    yL = _pmin(v, axes_t)
-    yR = _pmax(v, axes_t)
-    vsum = psum_(v)
-    fL = beta * (vsum / nf - yL)
-    fR = alpha * (yR - vsum / nf)
-    gL = alpha * (1.0 / nf) - beta * (nf - 1.0) / nf
-    gR = alpha * (nf - 1.0) / nf - beta * (1.0 / nf)
-    # answers at the extremes (incl. all-equal coordinates)
-    cle_min = psum_((v <= yL).astype(jnp.int32))
-    clt_max = psum_((v < yR).astype(jnp.int32))
-    ans0 = jnp.where(cle_min >= kk, yL, jnp.where(clt_max < kk, yR, jnp.nan))
-    done0 = cle_min >= kk
-    done0 = done0 | (clt_max < kk)
-
-    s0 = _VecState(
-        yL=yL, fL=fL, gL=jnp.broadcast_to(gL, shape),
-        yR=yR, fR=fR, gR=jnp.broadcast_to(gR, shape),
-        cleL=jnp.zeros(shape, jnp.int32),
-        ans=jnp.where(done0, ans0, jnp.zeros(shape, jnp.float32)),
-        done=done0,
-        it=jnp.asarray(0, jnp.int32),
-    )
-
-    def cond(s):
-        return (s.it < maxit) & ~jnp.all(
-            _pmin(s.done.astype(jnp.int32), axes_t) == 1)
-
-    def body(s):
-        t = (s.fR - s.fL + s.yL * s.gL - s.yR * s.gR) / (s.gL - s.gR)
-        bad = ~jnp.isfinite(t) | (t <= s.yL) | (t >= s.yR)
-        t = jnp.where(bad, 0.5 * (s.yL + s.yR), t)
-        d = v - t
-        lt = psum_((d < 0).astype(jnp.int32))
-        le = psum_((d <= 0).astype(jnp.int32))
-        f = psum_(beta * jnp.maximum(d, 0) + alpha * jnp.maximum(-d, 0)) / nf
-        ltf = lt.astype(jnp.float32)
-        lef = le.astype(jnp.float32)
-        g_lo = alpha * ltf / nf - beta * (nf - ltf) / nf
-        g_hi = alpha * lef / nf - beta * (nf - lef) / nf
-        exact = (lt < kk) & (kk <= le) & ~s.done
-        move_left = (g_hi < 0) & ~s.done
-        move_right = ~move_left & ~exact & ~s.done
-        return _VecState(
-            yL=jnp.where(move_left, t, s.yL),
-            fL=jnp.where(move_left, f, s.fL),
-            gL=jnp.where(move_left, g_hi, s.gL),
-            yR=jnp.where(move_right, t, s.yR),
-            fR=jnp.where(move_right, f, s.fR),
-            gR=jnp.where(move_right, g_lo, s.gR),
-            cleL=jnp.where(move_left, le, s.cleL),
-            ans=jnp.where(exact, t, s.ans),
-            done=s.done | exact,
-            it=s.it + 1,
-        )
-
-    s = jax.lax.while_loop(cond, body, s0)
+    # cap=0: iterate to exact hit (or maxit) — there is no compaction stage
+    # here (the replica data never leaves its device), so the finalize is
+    # certificate + tie-fallback only
+    s, _, _ = selection.bracket_loop_batched(
+        ev, method="cp", maxit=maxit, cap=0, found0=found0, t0=t0)
 
     # tie fallback for coordinates that did not exact-hit: next distinct
     # value above yL, certified by counts (one extra pair of psums).
     big = jnp.asarray(jnp.inf, jnp.float32)
     vnext = _pmin(jnp.where(v > s.yL, v, big), axes_t)
-    n_le_v = psum_((v <= vnext).astype(jnp.int32))
+    n_le_v = _psum((v <= vnext).astype(jnp.int32), axes_t)
     fb_ok = (s.cleL < kk) & (kk <= n_le_v)
-    ans = jnp.where(s.done, s.ans, jnp.where(fb_ok, vnext, s.yR))
+    ans = jnp.where(s.found_exact, s.t_exact,
+                    jnp.where(fb_ok, vnext, s.yR))
     return ans.astype(v_local.dtype)
 
 

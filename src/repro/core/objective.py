@@ -29,10 +29,34 @@ in this module is a single fused read-only pass over ``x`` (the paper's
 ``transform_reduce``), which is what makes the method shard-friendly: partial
 ``(sum_pos, sum_neg, n_lt, n_le)`` quadruples combine additively across
 devices (psum of four scalars).
+
+Evaluator contract (the batched-first engine's only data interface)
+-------------------------------------------------------------------
+The selection engine in :mod:`repro.core.selection` never touches the data
+directly; it talks to an :class:`Evaluator`, which owns the data layout and
+answers one question per iteration:
+
+    evaluator(y: (B,) pivots) -> FG with (B,) fields
+
+plus the initial statistics ``init_stats() -> (xmin, xmax, xmean)`` (each
+``(B,)``) and the static attributes ``n`` (elements per problem, ``(B,)`` or
+scalar) and ``k`` (target ranks, ``(B,)``).  Anything that can produce the
+four additive partials per pivot is a valid evaluator:
+
+* :class:`RowsEvaluator`    — ``(B, n)`` rows, per-row pivot (independent
+  problems: coordinate-wise medians, per-start LMS/LTS criteria, kNN rows);
+* :class:`SharedEvaluator`  — ONE array, ``(K,)`` pivots (quantile sets /
+  ``multi_order_statistic``); backed by the multi-pivot Pallas kernel that
+  reads each ``x`` tile into VMEM once and emits partials for all K pivots;
+* :class:`ShardedEvaluator` — the data lives sharded across a mesh axis; the
+  local fused pass is combined by a ``psum`` of the four partials (the
+  paper's multi-GPU combine, see :mod:`repro.core.distributed`).
+
+Scalar selection is just the ``B=1`` view of the rows regime.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Callable, NamedTuple, Protocol
 
 import jax
 import jax.numpy as jnp
@@ -96,3 +120,141 @@ def eval_fg_batched(x: jax.Array, y: jax.Array, k) -> FG:
     """Row-wise variant: ``x`` is (B, n), ``y``/``k`` are (B,)."""
     b_eval = jax.vmap(lambda xi, yi, ki: eval_fg(xi, yi, ki))
     return b_eval(x, y, jnp.broadcast_to(jnp.asarray(k), (x.shape[0],)))
+
+
+# ---------------------------------------------------------------------------
+# Evaluator abstraction — the batched-first engine's data interface
+# ---------------------------------------------------------------------------
+
+
+class Evaluator(Protocol):
+    """Batched pivot evaluation: pivots ``(B,)`` -> :class:`FG` with ``(B,)``
+    fields.  ``n`` is the per-problem element count (``(B,)`` or scalar),
+    ``k`` the 1-indexed target ranks ``(B,)``.  ``init_stats`` returns
+    per-problem ``(min, max, mean)`` — one extra fused pass, used to seat the
+    initial bracket and cutting planes analytically."""
+
+    n: jax.Array
+    k: jax.Array
+
+    def __call__(self, y: jax.Array) -> FG: ...
+
+    def init_stats(self) -> tuple[jax.Array, jax.Array, jax.Array]: ...
+
+
+class RowsEvaluator:
+    """Independent rows: ``x`` is (B, n), one pivot and one ``k`` per row.
+
+    The data pass is ``kernels.ops.fused_partials_batched`` (Pallas on TPU,
+    fused jnp elsewhere, Pallas-interpret for kernel validation on CPU).
+    """
+
+    def __init__(self, x: jax.Array, k, *, backend: str | None = None):
+        from repro.kernels import ops as kops  # deferred: core <-> kernels
+
+        self._partials = lambda y: kops.fused_partials_batched(
+            x, y, backend=backend)
+        self.x = x
+        self.n = jnp.asarray(x.shape[1], jnp.int32)
+        self.k = jnp.broadcast_to(
+            jnp.clip(jnp.asarray(k, jnp.int32), 1, x.shape[1]), (x.shape[0],))
+
+    def __call__(self, y: jax.Array) -> FG:
+        return fg_from_partials(self._partials(y), self.n, self.k)
+
+    def init_stats(self):
+        x = self.x
+        return (jnp.min(x, axis=1), jnp.max(x, axis=1),
+                jnp.mean(x, axis=1, dtype=x.dtype))
+
+
+class SharedEvaluator:
+    """One shared array, K live pivots (``multi_order_statistic``).
+
+    The data pass is ``kernels.ops.fused_partials_multi``: the multi-pivot
+    Pallas kernel reads each ``x`` tile into VMEM once and emits partials
+    for all K pivots — K× less HBM traffic than K independent passes.
+    """
+
+    def __init__(self, x: jax.Array, ks, *, backend: str | None = None):
+        from repro.kernels import ops as kops  # deferred: core <-> kernels
+
+        self.x = x = x.reshape(-1)
+        self._partials = lambda y: kops.fused_partials_multi(
+            x, y, backend=backend)
+        self.n = jnp.asarray(x.size, jnp.int32)
+        self.k = jnp.clip(jnp.asarray(ks, jnp.int32).reshape(-1), 1, x.size)
+
+    def __call__(self, y: jax.Array) -> FG:
+        return fg_from_partials(self._partials(y), self.n, self.k)
+
+    def init_stats(self):
+        x, b = self.x, self.k.shape[0]
+        bc = lambda v: jnp.broadcast_to(v, (b,))
+        return (bc(jnp.min(x)), bc(jnp.max(x)),
+                bc(jnp.mean(x, dtype=x.dtype)))
+
+
+class ShardedEvaluator:
+    """Data sharded over mesh axis/axes: local fused pass + psum combine.
+
+    ``B = 1`` view (scalar pivot broadcast from the engine's (1,) state) —
+    the psum of the four additive partials IS the cross-device combine; no
+    data moves.  Must be constructed inside ``shard_map``.
+    """
+
+    def __init__(self, x_local: jax.Array, k, axes, *,
+                 backend: str | None = None):
+        from repro.kernels import ops as kops  # deferred: core <-> kernels
+
+        self.x_local = x_local = x_local.reshape(-1)
+        self.axes = axes = (axes,) if isinstance(axes, str) else tuple(axes)
+        self._backend = backend
+        self._partials1 = lambda y: kops.fused_partials(
+            x_local, y, backend=backend)
+        self.n = jax.lax.psum(jnp.asarray(x_local.size, jnp.int32), axes)
+        self.k = jnp.clip(jnp.asarray(k, jnp.int32), 1, self.n)
+
+    def __call__(self, y: jax.Array) -> FG:
+        return self.combine(self._partials1(y))
+
+    def local_partials(self, y: jax.Array):
+        """This shard's un-psum'd quadruple (for shard-local bookkeeping —
+        the distributed hybrid finalize bounds the PER-SHARD in-bracket
+        count, see ``distributed.local_order_statistic``)."""
+        return self._partials1(y)
+
+    def combine(self, partials) -> FG:
+        """The cross-device combine IS a psum of the four additive partials
+        (the paper's "partial sums from several GPUs are added")."""
+        sp, sn, lt, le = partials
+        fsum = jax.lax.psum(jnp.stack([sp, sn]), self.axes)
+        csum = jax.lax.psum(jnp.stack([lt, le]), self.axes)
+        return fg_from_partials((fsum[0], fsum[1], csum[0], csum[1]),
+                                self.n, self.k)
+
+    def init_stats(self):
+        x, axes = self.x_local, self.axes
+        xsum = jax.lax.psum(jnp.sum(x, dtype=x.dtype), axes)
+        return (jax.lax.pmin(jnp.min(x), axes),
+                jax.lax.pmax(jnp.max(x), axes),
+                xsum / self.n.astype(x.dtype))
+
+
+class FnEvaluator:
+    """Adapter: wrap a raw ``partials(y) -> (sp, sn, lt, le)`` closure (all
+    fields ``(B,)``-shaped) as an :class:`Evaluator`.  Used by the
+    distributed across-axis solver, where the combine is a per-coordinate
+    psum, and by tests that drive the engine through a custom backend."""
+
+    def __init__(self, partials: Callable, n, k, init_stats: Callable):
+        self._partials = partials
+        self.n = n
+        self.k = k
+        self._init_stats = init_stats
+
+    def __call__(self, y: jax.Array) -> FG:
+        return fg_from_partials(self._partials(y), self.n, self.k)
+
+    def init_stats(self):
+        return self._init_stats()

@@ -17,6 +17,14 @@ plus the training-framework integrations (robust aggregation, quantile clip).
   break exactness).
 * kNN by order statistic (no sort): indicator weights from d_(k).
 * Robust gradient aggregation + quantile clipping for distributed training.
+
+Batched-first wiring: every multi-problem selection here rides the rows-mode
+engine (``selection.select_rows`` over a ``(B, n)`` residual/distance
+matrix) — one batched bracket loop for ALL elemental starts / queries per
+step, instead of lock-stepping B scalar solvers under ``jax.vmap``.  The
+concentration scan is therefore structured *starts-inside, steps-outside*:
+``lax.scan`` over C-steps carries the whole (n_starts, p) theta block, and
+each step does one batched selection + one batched weighted refit.
 """
 from __future__ import annotations
 
@@ -49,13 +57,20 @@ def lts_objective_from_residuals(r, h, **kw):
     """Sum of the h smallest squared residuals via the rho/(a,b) trick.
 
     One selection + one fused masked reduction; no sort, no partial sort.
+    The B=1 view of :func:`lts_objective_rows`.
     """
-    a2 = r * r
-    m = selection.order_statistic(a2, h, **kw).value
-    below = jnp.sum(jnp.where(a2 < m, a2, 0.0), dtype=a2.dtype)
-    b_lo = jnp.sum(a2 < m, dtype=jnp.int32)
+    return lts_objective_rows(r.reshape(1, -1), h, **kw)[0]
+
+
+def lts_objective_rows(R, h, **kw):
+    """Row-wise LTS criterion: ``R`` is (B, n) residuals, one scalar per
+    row — the rho/(a,b) trick on top of one rows-mode batched selection."""
+    a2 = R * R
+    m = selection.select_rows(a2, h, **kw).value[:, None]
+    below = jnp.sum(jnp.where(a2 < m, a2, 0.0), axis=1, dtype=a2.dtype)
+    b_lo = jnp.sum(a2 < m, axis=1, dtype=jnp.int32)
     a = (jnp.asarray(h, jnp.int32) - b_lo).astype(a2.dtype)
-    return below + a * m
+    return below + a * m[:, 0]
 
 
 def lts_objective(theta, X, y, h=None, **kw):
@@ -94,10 +109,20 @@ def _elemental_thetas(key, X, y, n_starts):
 
 def _lts_weights(r, h):
     """Fractional trimming weights: 1 / (a/b) / 0 per the paper's rho."""
-    a2 = r * r
-    m = selection.order_statistic(a2, h).value
-    b_lo = jnp.sum(a2 < m, dtype=jnp.int32)
-    b_eq = jnp.sum(a2 == m, dtype=jnp.int32)
+    return _lts_weights_rows(r[None, :], h)[0]
+
+
+def _lts_weights_rows(R, h):
+    """Row-wise fractional trimming weights for (B, n) residual blocks.
+
+    One rows-mode batched selection yields every row's cutoff m = |r|^2_(h)
+    at once; ties at the cutoff get weight a/b so each row keeps EXACTLY h
+    points in total weight.
+    """
+    a2 = R * R
+    m = selection.select_rows(a2, h).value[:, None]
+    b_lo = jnp.sum(a2 < m, axis=1, keepdims=True, dtype=jnp.int32)
+    b_eq = jnp.sum(a2 == m, axis=1, keepdims=True, dtype=jnp.int32)
     a = jnp.asarray(h, jnp.int32) - b_lo
     frac = a.astype(a2.dtype) / jnp.maximum(b_eq, 1).astype(a2.dtype)
     return jnp.where(a2 < m, 1.0, jnp.where(a2 == m, frac, 0.0))
@@ -109,31 +134,35 @@ def _weighted_ls(X, y, w):
     return jnp.linalg.solve(G, Xw.T @ y)
 
 
+def _weighted_ls_rows(X, y, W):
+    """Batched weighted LS: ``W`` is (B, n) weights, one solve per row."""
+    return jax.vmap(lambda w: _weighted_ls(X, y, w))(W)
+
+
 @functools.partial(jax.jit, static_argnames=("n_starts", "c_steps", "h"))
 def lts_fit(key, X, y, *, h: Optional[int] = None, n_starts: int = 64,
             c_steps: int = 10) -> RobustFit:
     """FAST-LTS: elemental starts -> concentration steps -> best fit.
 
-    Each concentration step: threshold at the h-th smallest squared residual
-    (CP selection, no sort), weighted-LS refit on the h kept points.  The
-    objective is monotone non-increasing along C-steps (Rousseeuw & Van
-    Driessen), so the final best-of-starts is a high-breakdown estimate.
+    Concentration runs starts-inside, steps-outside: each ``lax.scan`` step
+    thresholds ALL starts' squared residuals at their h-th order statistic
+    in ONE rows-mode batched selection (no sort), then refits every start by
+    weighted LS.  The objective is monotone non-increasing along C-steps
+    (Rousseeuw & Van Driessen), so the final best-of-starts is a
+    high-breakdown estimate.
     """
     n, p = X.shape
     hh = (n + p + 1) // 2 if h is None else h
 
     thetas0 = _elemental_thetas(key, X, y, n_starts)
 
-    def c_step(theta, _):
-        w = _lts_weights(residuals(theta, X, y), hh)
-        return _weighted_ls(X, y, w), None
+    def c_step(thetas, _):
+        R = thetas @ X.T - y[None, :]          # (n_starts, n) residuals
+        W = _lts_weights_rows(R, hh)           # one batched selection
+        return _weighted_ls_rows(X, y, W), None
 
-    def run_start(theta0):
-        theta, _ = jax.lax.scan(c_step, theta0, None, length=c_steps)
-        obj = lts_objective(theta, X, y, h=hh)
-        return theta, obj
-
-    thetas, objs = jax.vmap(run_start)(thetas0)
+    thetas, _ = jax.lax.scan(c_step, thetas0, None, length=c_steps)
+    objs = lts_objective_rows(thetas @ X.T - y[None, :], hh)
     best = jnp.argmin(objs)
     theta = thetas[best]
     return RobustFit(
@@ -147,12 +176,14 @@ def lts_fit(key, X, y, *, h: Optional[int] = None, n_starts: int = 64,
 def lms_fit(key, X, y, *, n_starts: int = 256) -> RobustFit:
     """LMS by best-of-elemental-starts (the classical PROGRESS approach).
 
-    Every start's criterion Med(r^2) is one CP selection; the batch of
-    selections is vmapped — thousands of concurrent selection problems, the
-    workload the paper's GPU method targets.
+    Every start's criterion Med(r^2) is one row of a single rows-mode
+    batched selection — thousands of concurrent selection problems in one
+    bracket loop, the workload the paper's GPU method targets.
     """
+    n = X.shape[0]
     thetas = _elemental_thetas(key, X, y, n_starts)
-    objs = jax.vmap(lambda t: lms_objective(t, X, y))(thetas)
+    R2 = (thetas @ X.T - y[None, :]) ** 2      # (n_starts, n)
+    objs = selection.select_rows(R2, (n + 1) // 2).value
     best = jnp.argmin(objs)
     theta = thetas[best]
     r2 = residuals(theta, X, y) ** 2
@@ -172,9 +203,10 @@ def knn_predict(train_x, train_y, query_x, k: int, *, classify: bool = False,
                 n_classes: int = 0):
     """kNN regression/classification without sorting the distances.
 
-    Distances by one MXU-friendly matmul; the k-NN cutoff is the k-th order
-    statistic per query (batched CP selection); ties at the cutoff get
-    fractional weight so exactly k neighbors are counted.
+    Distances by one MXU-friendly matmul; the k-NN cutoffs for ALL queries
+    come from one rows-mode batched selection over the (Q, n) distance
+    matrix; ties at the cutoff get fractional weight so exactly k neighbors
+    are counted.
     """
     # squared euclidean distances via ||a-b||^2 expansion (one matmul)
     d2 = (
@@ -183,10 +215,7 @@ def knn_predict(train_x, train_y, query_x, k: int, *, classify: bool = False,
         + jnp.sum(train_x**2, -1)[None, :]
     )
 
-    def cutoff(row):
-        return selection.order_statistic(row, k).value
-
-    dk = jax.vmap(cutoff)(d2)[:, None]
+    dk = selection.select_rows(d2, k).value[:, None]
     lt = (d2 < dk).astype(d2.dtype)
     eq = (d2 == dk).astype(d2.dtype)
     n_lt = jnp.sum(lt, -1, keepdims=True)

@@ -1,6 +1,24 @@
 """Selection (k-th order statistic) by convex minimization — Beliakov (2011).
 
-Implements the paper's method set on a single shared skeleton:
+Batched-first architecture
+--------------------------
+The engine is *batched-first*: the bracket loop, the exact-hit certificates
+and the hybrid finalize all operate on ``(B,)`` state vectors, fed by an
+:class:`repro.core.objective.Evaluator` (pivots ``(B,)`` -> ``FG`` partials
+``(B,)``).  Scalar selection is the ``B = 1`` view.  Two batched regimes:
+
+* **rows mode** (:func:`select_rows`) — ``(B, n)`` independent problems with
+  per-row ``k``, driven by the row-wise fused kernel
+  (``kernels.ops.fused_partials_batched``).  This is the production workload:
+  coordinate-wise medians, LMS/LTS concentration over elemental starts, kNN
+  cutoff rows.
+* **shared-x mode** (:func:`multi_order_statistic` / :func:`quantiles`) — ONE
+  array, ``(K,)`` target ranks, driven by the multi-pivot Pallas kernel
+  (``kernels.ops.fused_partials_multi``) that reads each ``x`` tile into VMEM
+  once and emits partials for all K live pivots — K× less HBM traffic than K
+  lock-stepped independent solves.
+
+Methods (shared skeleton, they differ only in the next-pivot proposal):
 
 * ``cp``        — Kelley's cutting-plane method (Algorithm 1 of the paper).
 * ``bisection`` — classical bisection on the subgradient sign (paper Sec. III).
@@ -8,25 +26,37 @@ Implements the paper's method set on a single shared skeleton:
 * ``brent``     — parabolic fit with bisection safeguard (paper baseline).
 * ``sort``      — full ``jnp.sort`` (the paper's "GPU radix sort" baseline).
 
-All iterative methods run the same ``lax.while_loop``; they differ only in the
-*proposal* of the next pivot.  Each iteration costs exactly one fused pass
-over the data (``objective.eval_partials``) — the paper's
-``maxit + O(1)`` parallel reductions.
+Each iteration costs exactly one fused pass over the data — the paper's
+``maxit + O(1)`` parallel reductions — regardless of how many problems ride
+in the batch.
 
 Exactness: unlike the paper (which stops on a float tolerance and then scans
 for the largest ``x_i <= y~``), we carry the counts ``n_lt / n_le`` through
-the loop, which yields
+the loop PER ROW, which yields
 
   1. an *exact-hit* certificate ``n_lt < k <= n_le  =>  pivot == x_(k)``;
   2. a count-based stopping rule ``count(y_L < x <= y_R) <= cap`` that turns
      the paper's dynamic-size ``copy_if`` into a *static-shape* fixed-capacity
-     compaction (required for ``jit``);
-  3. a tie-safe fallback: if more than ``cap`` duplicates of ``x_(k)`` exist,
-     the next distinct value above ``y_L`` is verified by one extra counting
-     pass.
+     compaction (required for ``jit``), performed row-wise into a
+     ``(B, cap)`` buffer sorted in one batched sort;
+  3. a tie-safe fallback: if more than ``cap`` duplicates of ``x_(k)`` exist
+     in a row, the next distinct value above that row's ``y_L`` is verified
+     by one extra counting pass.
 
-Invariants maintained by the loop (proved by the subdifferential signs, see
+Rows stop independently (per-row live mask); the loop exits when every row
+has either certified an exact hit or shrunk its pivot interval under ``cap``.
+
+Invariants maintained per row (proved by the subdifferential signs, see
 ``objective.py``):   count(x <= y_L) < k <= count(x <= y_R).
+
+``transform='log1p'`` and the batched finalize: the loop runs on the
+monotone image ``F(x) = log1p(x - min(x))`` (per row in rows mode), and the
+final bracket is mapped back to original values *data-consistently* before
+the exact finalize — ``y_orig = max{x_i : F(x_i) <= y_t}`` preserves counts
+exactly, so the row invariants transfer and the compaction/tie logic runs on
+untransformed data.  Exact-hit certificates do NOT survive the fp roundtrip
+(F is not injective in fp): they are dropped per row and re-derived by the
+original-space finalize.
 """
 from __future__ import annotations
 
@@ -36,7 +66,13 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.objective import FG, eval_fg, fg_from_partials, os_weights
+from repro.core.objective import (
+    FG,
+    Evaluator,
+    RowsEvaluator,
+    SharedEvaluator,
+    os_weights,
+)
 from repro.core import transforms
 
 METHODS = ("cp", "cp_hybrid", "bisection", "golden", "brent", "sort")
@@ -50,14 +86,17 @@ NOT_CONVERGED = 3   # approximate answer (bracket right end)
 
 class SelectResult(NamedTuple):
     value: jax.Array        # the order statistic (exact unless status==3)
-    iters: jax.Array        # number of f/g evaluations inside the loop
+    iters: jax.Array        # number of f/g evaluations this row was live for
     status: jax.Array       # see codes above
     y_lo: jax.Array         # final bracket
     y_hi: jax.Array
     n_in: jax.Array         # count(y_lo < x <= y_hi) at exit
 
 
-class _LoopState(NamedTuple):
+class BatchState(NamedTuple):
+    """Bracket-loop state; every field is (B,)-shaped except the scalar
+    global iteration counter ``it`` (frozen rows stop updating but the batch
+    iterates until all rows are done)."""
     yL: jax.Array
     fL: jax.Array
     gL: jax.Array   # right one-sided derivative at yL (< 0)
@@ -68,32 +107,33 @@ class _LoopState(NamedTuple):
     cleR: jax.Array  # exact count(x <= yR)
     t_exact: jax.Array
     found_exact: jax.Array
-    it: jax.Array
+    iters: jax.Array  # per-row live-iteration count
+    it: jax.Array     # global (batch) iteration count
     # golden/brent bookkeeping: previous probe (for parabolic fit)
     tp: jax.Array
     fp: jax.Array
 
 
-def _propose_cp(s: _LoopState, n, k):
+def _propose_cp(s: BatchState):
     """Kelley cut intersection: minimizer of max of the two support lines."""
     return (s.fR - s.fL + s.yL * s.gL - s.yR * s.gR) / (s.gL - s.gR)
 
 
-def _propose_bisection(s: _LoopState, n, k):
+def _propose_bisection(s: BatchState):
     return 0.5 * (s.yL + s.yR)
 
 
 _INV_GOLDEN = 0.381966011250105  # 2 - golden ratio
 
 
-def _propose_golden(s: _LoopState, n, k):
+def _propose_golden(s: BatchState):
     # Shrink from the side whose objective value is larger (descent side).
     left = s.fL > s.fR
     w = jnp.where(left, _INV_GOLDEN, 1.0 - _INV_GOLDEN)
     return s.yL + w * (s.yR - s.yL)
 
 
-def _propose_brent(s: _LoopState, n, k):
+def _propose_brent(s: BatchState):
     """Parabola through (yL,fL), (tp,fp), (yR,fR); midpoint safeguard."""
     x1, f1, x2, f2, x3, f3 = s.yL, s.fL, s.tp, s.fp, s.yR, s.fR
     num = (x2 - x1) ** 2 * (f2 - f3) - (x2 - x3) ** 2 * (f2 - f1)
@@ -114,106 +154,134 @@ _PROPOSALS = {
 }
 
 
-def _bracket_loop(x, k, *, method, maxit, cap, eval_fn=None):
-    """Run the shared bracket-shrinking loop; returns final _LoopState."""
-    n = x.size
-    dtype = x.dtype
-    propose = _PROPOSALS[method]
-    if eval_fn is None:
-        eval_fn = lambda t: eval_fg(x, t, k)
+def _live(s: BatchState, cap):
+    return (~s.found_exact) & (s.cleR - s.cleL > cap) & (s.yR > s.yL)
 
-    xmin = jnp.min(x)
-    xmax = jnp.max(x)
-    xmean = jnp.mean(x, dtype=dtype)
-    alpha, beta = os_weights(n, k, dtype)
-    nf = jnp.asarray(n, dtype)
+
+def bracket_loop_batched(
+    ev: Evaluator,
+    *,
+    method: str = "cp",
+    maxit: int = 64,
+    cap=0,
+    found0: Optional[jax.Array] = None,
+    t0: Optional[jax.Array] = None,
+):
+    """Run the batched bracket-shrinking loop against an evaluator.
+
+    ``ev`` owns the data; this loop only sees ``(B,)`` vectors.  ``cap`` is
+    the per-row stopping count (0 = iterate to exact hit / maxit, the
+    distributed across-axis regime).  ``found0``/``t0`` pre-seed rows whose
+    answer is already certified (e.g. extreme ranks) so they never go live.
+
+    Returns ``(final BatchState, xmin, xmax)`` with per-row extremes.
+    """
+    propose = _PROPOSALS[method]
+    xmin, xmax, xmean = ev.init_stats()
+    k = ev.k
+    shape = jnp.broadcast_shapes(jnp.shape(xmin), jnp.shape(k))
+    dtype = xmin.dtype
+    nf = jnp.broadcast_to(jnp.asarray(ev.n, dtype), shape)
+    kk = jnp.broadcast_to(jnp.asarray(k, jnp.int32), shape)
+    alpha, beta = os_weights(nf, kk, dtype)
+    bc = lambda v: jnp.broadcast_to(jnp.asarray(v, dtype), shape)
+
     # Analytic init at the extremes (paper: single fused reduction).  The
     # slopes use the conservative tie count 1, which keeps the support lines
     # *lower* bounds (valid cuts) even with duplicated extremes.
+    xmin, xmax, xmean = bc(xmin), bc(xmax), bc(xmean)
     fL0 = beta * (xmean - xmin)
     fR0 = alpha * (xmax - xmean)
     gL0 = alpha * (1.0 / nf) - beta * (nf - 1.0) / nf
     gR0 = alpha * (nf - 1.0) / nf - beta * (1.0 / nf)
 
-    kk = jnp.asarray(k, jnp.int32)
-    s0 = _LoopState(
+    if found0 is None:
+        found0 = jnp.zeros(shape, bool)
+    if t0 is None:
+        t0 = jnp.full(shape, jnp.nan, dtype)
+    s0 = BatchState(
         yL=xmin, fL=fL0, gL=gL0,
         yR=xmax, fR=fR0, gR=gR0,
-        cleL=jnp.asarray(1, jnp.int32),  # count(x<=min) >= 1 (conservative)
-        cleR=jnp.asarray(n, jnp.int32),
-        t_exact=jnp.asarray(jnp.nan, dtype),
-        found_exact=jnp.asarray(False),
+        cleL=jnp.ones(shape, jnp.int32),   # count(x<=min) >= 1 (conservative)
+        cleR=jnp.broadcast_to(jnp.asarray(ev.n, jnp.int32), shape),
+        t_exact=t0,
+        found_exact=jnp.broadcast_to(found0, shape),
+        iters=jnp.zeros(shape, jnp.int32),
         it=jnp.asarray(0, jnp.int32),
         tp=0.5 * (xmin + xmax), fp=jnp.maximum(fL0, fR0),
     )
 
-    def cond(s: _LoopState):
-        return (
-            (~s.found_exact)
-            & (s.cleR - s.cleL > cap)
-            & (s.it < maxit)
-            & (s.yR > s.yL)
-        )
+    def cond(s: BatchState):
+        return (s.it < maxit) & jnp.any(_live(s, cap))
 
-    def body(s: _LoopState):
-        t = propose(s, n, k)
-        # numerical safeguard: keep strictly inside the open bracket
+    def body(s: BatchState):
+        lv = _live(s, cap)
+        t = propose(s)
+        # numerical safeguard: keep strictly inside the open bracket (frozen
+        # rows get the midpoint — their updates are masked out anyway)
         bad = ~jnp.isfinite(t) | (t <= s.yL) | (t >= s.yR)
         t = jnp.where(bad, 0.5 * (s.yL + s.yR), t).astype(dtype)
-        fg: FG = eval_fn(t)
-        exact = (fg.n_lt < kk) & (kk <= fg.n_le)
-        move_left = fg.g_hi < 0  # t strictly left of the minimizer set
-        # if neither exact nor move_left then g_lo > 0 -> t strictly right.
-        new = _LoopState(
+        fg: FG = ev(t)
+        exact = (fg.n_lt < kk) & (kk <= fg.n_le) & lv
+        # exact => 0 in [g_lo, g_hi] => g_hi >= 0, so the two are disjoint:
+        move_left = (fg.g_hi < 0) & lv   # t strictly left of the minimizer
+        move_right = lv & ~move_left & ~exact  # then g_lo > 0: strictly right
+        return BatchState(
             yL=jnp.where(move_left, t, s.yL),
             fL=jnp.where(move_left, fg.f, s.fL),
             gL=jnp.where(move_left, fg.g_hi, s.gL),
-            yR=jnp.where(move_left | exact, s.yR, t),
-            fR=jnp.where(move_left | exact, s.fR, fg.f),
-            gR=jnp.where(move_left | exact, s.gR, fg.g_lo),
+            yR=jnp.where(move_right, t, s.yR),
+            fR=jnp.where(move_right, fg.f, s.fR),
+            gR=jnp.where(move_right, fg.g_lo, s.gR),
             cleL=jnp.where(move_left, fg.n_le, s.cleL),
-            cleR=jnp.where(move_left | exact, s.cleR, fg.n_le),
+            cleR=jnp.where(move_right, fg.n_le, s.cleR),
             t_exact=jnp.where(exact, t, s.t_exact),
             found_exact=s.found_exact | exact,
+            iters=s.iters + lv.astype(jnp.int32),
             it=s.it + 1,
-            tp=t, fp=fg.f,
+            tp=jnp.where(lv, t, s.tp), fp=jnp.where(lv, fg.f, s.fp),
         )
-        return new
 
     return jax.lax.while_loop(cond, body, s0), xmin, xmax
 
 
-def _finalize(x, k, s: _LoopState, cap, xmin, xmax):
-    """Exact recovery from the final bracket.  Two fused passes.
+def _finalize_rows(x, ks, s: BatchState, cap, xmin, xmax) -> SelectResult:
+    """Exact per-row recovery from the final brackets.  Two fused passes.
 
-    Pass 1 (the paper's ``copy_if`` + count): compact elements of the open
-    pivot interval into a fixed ``cap`` buffer, count ``c_L = count(x<=y_L)``
-    and find the next distinct value above ``y_L``.
-    Pass 2 (tie fallback verification): ``count(x <= vnext)``.
+    Pass 1 (the paper's ``copy_if`` + count, row-wise): compact each row's
+    open pivot interval into a fixed ``(B, cap)`` buffer (slot ``cap`` is the
+    overflow trash slot), count ``c_L = count(x<=y_L)`` and find the next
+    distinct value above ``y_L``; one batched sort of the (B, cap) buffer.
+    Pass 2 (tie fallback verification): ``count(x <= vnext)`` per row.
     """
-    n = x.size
-    kk = jnp.asarray(k, jnp.int32)
-    x = x.reshape(-1)
+    b, n = x.shape
+    kk = jnp.broadcast_to(jnp.asarray(ks, jnp.int32), (b,))
+    yL = s.yL[:, None]
+    yR = s.yR[:, None]
 
-    mask_in = (x > s.yL) & (x <= s.yR)
-    cL = jnp.sum(x <= s.yL, dtype=jnp.int32)
-    n_in = jnp.sum(mask_in, dtype=jnp.int32)
-    # fixed-capacity compaction; slot `cap` is the overflow trash slot
-    pos = jnp.cumsum(mask_in.astype(jnp.int32)) - 1
+    mask_in = (x > yL) & (x <= yR)
+    cL = jnp.sum(x <= yL, axis=1, dtype=jnp.int32)
+    n_in = jnp.sum(mask_in, axis=1, dtype=jnp.int32)
+    # fixed-capacity row-wise compaction
+    pos = jnp.cumsum(mask_in.astype(jnp.int32), axis=1) - 1
     idx = jnp.where(mask_in, jnp.minimum(pos, cap), cap)
     big = jnp.asarray(jnp.inf, x.dtype)
-    z = jnp.full((cap + 1,), big, x.dtype).at[idx].set(jnp.where(mask_in, x, big))
-    zs = jax.lax.sort(z[:cap])
-    ans_sort = zs[jnp.clip(kk - cL - 1, 0, cap - 1)]
+    rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+    z = jnp.full((b, cap + 1), big, x.dtype).at[rows, idx].set(
+        jnp.where(mask_in, x, big))
+    zs = jnp.sort(z[:, :cap], axis=1)
+    sort_idx = jnp.clip(kk - cL - 1, 0, cap - 1)
+    ans_sort = jnp.take_along_axis(zs, sort_idx[:, None], axis=1)[:, 0]
 
-    vnext = jnp.min(jnp.where(x > s.yL, x, big))
-    n_le_v = jnp.sum(x <= vnext, dtype=jnp.int32)
+    vnext = jnp.min(jnp.where(x > yL, x, big), axis=1)
+    n_le_v = jnp.sum(x <= vnext[:, None], axis=1, dtype=jnp.int32)
     fallback_ok = (cL < kk) & (kk <= n_le_v)
 
     value = jnp.where(
         s.found_exact,
         s.t_exact,
-        jnp.where(n_in <= cap, ans_sort, jnp.where(fallback_ok, vnext, s.yR)),
+        jnp.where(n_in <= cap, ans_sort,
+                  jnp.where(fallback_ok, vnext, s.yR)),
     )
     status = jnp.where(
         s.found_exact,
@@ -228,14 +296,14 @@ def _finalize(x, k, s: _LoopState, cap, xmin, xmax):
     # answers strictly inside the data range): if count(x <= y_L) >= k the
     # answer is at or below y_L, which can only be x_(1)=min (y_L starts at
     # the min and only moves to points certified count(x<=t) < k).  Symmetric
-    # test at the max.  Also covers k==1, k==n and all-equal arrays.
-    n_lt_max = jnp.sum(x < xmax, dtype=jnp.int32)
+    # test at the max.  Also covers k==1, k==n and all-equal rows.
+    n_lt_max = jnp.sum(x < xmax[:, None], axis=1, dtype=jnp.int32)
     at_min = cL >= kk
     at_max = n_lt_max < kk
     value = jnp.where(at_min, xmin, jnp.where(at_max, xmax, value))
     status = jnp.where(at_min | at_max, EXACT_HIT, status)
     return SelectResult(
-        value=value, iters=s.it, status=status.astype(jnp.int32),
+        value=value, iters=s.iters, status=status.astype(jnp.int32),
         y_lo=s.yL, y_hi=s.yR, n_in=n_in,
     )
 
@@ -245,9 +313,102 @@ def _default_cap(n: int) -> int:
     return int(min(max(4096, n // 64), 1 << 19))
 
 
+def _default_cap_rows(n: int) -> int:
+    # Batched regimes keep a (B, cap) compaction buffer, so the per-row cap
+    # is tighter than the scalar default: a few more bracket iterations
+    # (cheap fused passes, shared by the whole batch) buy a much smaller
+    # batched sort.  Benchmarked in benchmarks/batched_selection_bench.py.
+    return int(min(max(256, n // 64), 4096))
+
+
+def _map_bracket_back_rows(x, xt, s: BatchState) -> BatchState:
+    """Map a transformed-domain bracket back to original values, row-wise.
+
+    F is monotone non-decreasing in fp on the data, so
+        y_orig = max{x_i : F(x_i) <= y_t}
+    preserves counts exactly: count(x <= y_orig) == count(F(x) <= y_t).
+    Both loop invariants (c(y_L) < k <= c(y_R)) therefore transfer to the
+    original domain, and the finalize stays exact.  On an exact hit the
+    t-space image may merge several distinct originals (F is not injective
+    in fp): collapse the bracket to the image's preimage set and drop the
+    certificate — the original-space finalize re-resolves it.
+    """
+    neg = jnp.asarray(-jnp.inf, x.dtype)
+    yL_t = jnp.where(s.found_exact, s.t_exact, s.yL)[:, None]
+    yR_t = jnp.where(s.found_exact, s.t_exact, s.yR)[:, None]
+    yL = jnp.where(
+        s.found_exact,
+        jnp.max(jnp.where(xt < yL_t, x, neg), axis=1),  # strict: preimage
+        jnp.max(jnp.where(xt <= yL_t, x, neg), axis=1),
+    )
+    yR = jnp.max(jnp.where(xt <= yR_t, x, neg), axis=1)
+    return s._replace(
+        yL=yL, yR=yR,
+        # exactness certificates do not survive the fp roundtrip:
+        found_exact=jnp.zeros_like(s.found_exact),
+    )
+
+
 @functools.partial(
-    jax.jit, static_argnames=("method", "maxit", "cap", "transform")
+    jax.jit,
+    static_argnames=("method", "maxit", "cap", "transform", "backend"),
 )
+def select_rows(
+    x: jax.Array,
+    k,
+    *,
+    method: str = "cp",
+    maxit: int = 64,
+    cap: Optional[int] = None,
+    transform: Optional[str] = None,
+    backend: Optional[str] = None,
+) -> SelectResult:
+    """Rows-mode batched selection: ``x`` is (B, n), ``k`` scalar or (B,).
+
+    Every field of the returned :class:`SelectResult` is (B,)-shaped; row
+    ``i`` solves the independent problem ``x[i], k[i]`` with the same
+    exactness guarantees as the scalar solver (which is the B=1 view of this
+    function).  ``backend`` selects the fused data pass
+    ('jnp' | 'pallas' | 'pallas_interpret', default: pallas on TPU).
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}; one of {METHODS}")
+    if x.ndim != 2:
+        raise ValueError(f"select_rows wants (B, n) data, got {x.shape}")
+    b, n = x.shape
+    if cap is None:
+        cap = _default_cap_rows(n)
+    cap = min(cap, n)
+    ks = jnp.broadcast_to(jnp.clip(jnp.asarray(k, jnp.int32), 1, n), (b,))
+
+    if method == "sort":
+        xs = jnp.sort(x, axis=1)
+        value = jnp.take_along_axis(xs, (ks - 1)[:, None], axis=1)[:, 0]
+        zero = jnp.zeros((b,), jnp.int32)
+        return SelectResult(
+            value=value, iters=zero,
+            status=jnp.full((b,), EXACT_HIT, jnp.int32),
+            y_lo=xs[:, 0], y_hi=xs[:, -1],
+            n_in=jnp.full((b,), n, jnp.int32),
+        )
+
+    if transform == "log1p":
+        xt = transforms.log1p_transform_rows(x)
+        s, _, _ = bracket_loop_batched(
+            RowsEvaluator(xt, ks, backend=backend),
+            method=method, maxit=maxit, cap=cap)
+        s = _map_bracket_back_rows(x, xt, s)
+        return _finalize_rows(x, ks, s, cap,
+                              jnp.min(x, axis=1), jnp.max(x, axis=1))
+    elif transform is not None:
+        raise ValueError(f"unknown transform {transform!r}")
+
+    ev = RowsEvaluator(x, ks, backend=backend)
+    s, xmin, xmax = bracket_loop_batched(ev, method=method, maxit=maxit,
+                                         cap=cap)
+    return _finalize_rows(x, ks, s, cap, xmin, xmax)
+
+
 def order_statistic(
     x: jax.Array,
     k,
@@ -256,65 +417,25 @@ def order_statistic(
     maxit: int = 64,
     cap: Optional[int] = None,
     transform: Optional[str] = None,
+    backend: Optional[str] = None,
 ) -> SelectResult:
     """k-th smallest element of ``x`` (k is 1-indexed, may be traced).
 
-    ``method`` in {"cp", "cp_hybrid", "bisection", "golden", "brent", "sort"}.
-    ``cp`` and ``cp_hybrid`` are aliases (the hybrid finalize is always on —
-    it is what makes the result exact).  ``transform='log1p'`` applies the
-    paper's monotone guard for extreme-valued data (Sec. V-D).
+    The ``B = 1`` view of :func:`select_rows`.  ``method`` in {"cp",
+    "cp_hybrid", "bisection", "golden", "brent", "sort"}.  ``cp`` and
+    ``cp_hybrid`` are aliases (the hybrid finalize is always on — it is what
+    makes the result exact).  ``transform='log1p'`` applies the paper's
+    monotone guard for extreme-valued data (Sec. V-D).
     """
-    if method not in METHODS:
-        raise ValueError(f"unknown method {method!r}; one of {METHODS}")
     x = x.reshape(-1)
-    n = x.size
     if cap is None:
-        cap = _default_cap(n)
-    cap = min(cap, n)
-    k = jnp.clip(jnp.asarray(k, jnp.int32), 1, n)
-
-    if method == "sort":
-        xs = jax.lax.sort(x)
-        value = xs[k - 1]
-        zero = jnp.asarray(0, jnp.int32)
-        return SelectResult(
-            value=value, iters=zero, status=jnp.asarray(EXACT_HIT, jnp.int32),
-            y_lo=xs[0], y_hi=xs[-1], n_in=jnp.asarray(n, jnp.int32),
-        )
-
-    if transform == "log1p":
-        xt, inv = transforms.log1p_transform(x)
-        s, tmin, tmax = _bracket_loop(xt, k, method=method, maxit=maxit, cap=cap)
-        # Map the bracket back *data-consistently*: F is monotone
-        # non-decreasing in fp on the data, so
-        #   y_orig = max{x_i : F(x_i) <= y_t}
-        # preserves counts exactly: count(x <= y_orig) == count(F(x) <= y_t).
-        # Both loop invariants (c(y_L) < k <= c(y_R)) therefore transfer to
-        # the original domain, and the finalize stays exact.  On an exact hit
-        # the t-space image may merge several distinct originals (F is not
-        # injective in fp): collapse the bracket to the image's preimage set
-        # and let the original-space finalize resolve it.
-        neg = jnp.asarray(-jnp.inf, x.dtype)
-        yL_t = jnp.where(s.found_exact, s.t_exact, s.yL)
-        yR_t = jnp.where(s.found_exact, s.t_exact, s.yR)
-        yL = jnp.where(
-            s.found_exact,
-            jnp.max(jnp.where(xt < yL_t, x, neg)),   # strict: preimage start
-            jnp.max(jnp.where(xt <= yL_t, x, neg)),
-        )
-        yR = jnp.max(jnp.where(xt <= yR_t, x, neg))
-        s = s._replace(
-            yL=yL, yR=yR,
-            t_exact=inv(s.t_exact),
-            # exactness certificates do not survive the fp roundtrip:
-            found_exact=jnp.asarray(False),
-        )
-        return _finalize(x, k, s, cap, jnp.min(x), jnp.max(x))
-    elif transform is not None:
-        raise ValueError(f"unknown transform {transform!r}")
-
-    s, xmin, xmax = _bracket_loop(x, k, method=method, maxit=maxit, cap=cap)
-    return _finalize(x, k, s, cap, xmin, xmax)
+        cap = _default_cap(x.size)  # scalar policy: one generous buffer
+    res = select_rows(
+        x[None, :], jnp.asarray(k, jnp.int32).reshape(1),
+        method=method, maxit=maxit, cap=cap, transform=transform,
+        backend=backend,
+    )
+    return jax.tree.map(lambda a: a[0], res)
 
 
 def median(x: jax.Array, **kw) -> SelectResult:
@@ -336,20 +457,127 @@ def topk_threshold(x: jax.Array, m, **kw) -> SelectResult:
     return order_statistic(x, n - jnp.asarray(m, jnp.int32) + 1, **kw)
 
 
-def multi_order_statistic(x: jax.Array, ks, **kw) -> SelectResult:
-    """Several order statistics of the SAME array at once (vmapped CP).
+@functools.partial(
+    jax.jit,
+    static_argnames=("method", "maxit", "cap", "transform", "backend"),
+)
+def multi_order_statistic(
+    x: jax.Array,
+    ks,
+    *,
+    method: str = "cp",
+    maxit: int = 64,
+    cap: Optional[int] = None,
+    transform: Optional[str] = None,
+    backend: Optional[str] = None,
+) -> SelectResult:
+    """Several order statistics of the SAME array at once (shared-x mode).
 
-    All brackets iterate together: each iteration evaluates every live
-    pivot against ``x`` in one batched pass (a single fused kernel launch on
-    TPU) instead of len(ks) independent selections — the cheap way to get
-    (p25, p50, p75, p99, ...) telemetry sets.
+    All K brackets iterate together against the multi-pivot fused kernel:
+    each iteration reads ``x`` ONCE and evaluates every live pivot from the
+    resident tile (on TPU: one VMEM load per tile for all K pivots) — the
+    cheap way to get (p25, p50, p75, p99, ...) telemetry sets.  The finalize
+    broadcasts ``x`` across the K rows for the O(1) compaction passes only;
+    the ``maxit`` hot iterations never duplicate the data.
     """
-    ks = jnp.asarray(ks, jnp.int32)
-    return jax.vmap(lambda k: order_statistic(x, k, **kw))(ks)
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}; one of {METHODS}")
+    x = x.reshape(-1)
+    n = x.size
+    ks = jnp.clip(jnp.asarray(ks, jnp.int32).reshape(-1), 1, n)
+    nk = ks.shape[0]
+    if cap is None:
+        cap = _default_cap_rows(n)
+    cap = min(cap, n)
+
+    if method == "sort":
+        xs = jax.lax.sort(x)
+        zero = jnp.zeros((nk,), jnp.int32)
+        return SelectResult(
+            value=xs[ks - 1], iters=zero,
+            status=jnp.full((nk,), EXACT_HIT, jnp.int32),
+            y_lo=jnp.broadcast_to(xs[0], (nk,)),
+            y_hi=jnp.broadcast_to(xs[-1], (nk,)),
+            n_in=jnp.full((nk,), n, jnp.int32),
+        )
+
+    if transform == "log1p":
+        xt, _ = transforms.log1p_transform(x)
+        s, _, _ = bracket_loop_batched(
+            SharedEvaluator(xt, ks, backend=backend),
+            method=method, maxit=maxit, cap=cap)
+        xb = jnp.broadcast_to(x[None, :], (nk, n))
+        s = _map_bracket_back_rows(xb, jnp.broadcast_to(xt[None, :],
+                                                        (nk, n)), s)
+        bcast = lambda v: jnp.broadcast_to(v, (nk,))
+        return _finalize_rows(xb, ks, s, cap,
+                              bcast(jnp.min(x)), bcast(jnp.max(x)))
+    elif transform is not None:
+        raise ValueError(f"unknown transform {transform!r}")
+
+    ev = SharedEvaluator(x, ks, backend=backend)
+    s, xmin, xmax = bracket_loop_batched(ev, method=method, maxit=maxit,
+                                         cap=cap)
+    xb = jnp.broadcast_to(x[None, :], (nk, n))
+    return _finalize_rows(xb, ks, s, cap, xmin, xmax)
 
 
 def quantiles(x: jax.Array, qs, **kw) -> SelectResult:
-    """Lower empirical quantiles at each q in ``qs`` (one vmapped solve)."""
+    """Lower empirical quantiles at each q in ``qs`` (one shared-x solve)."""
     n = x.size
     ks = jnp.clip(jnp.ceil(jnp.asarray(qs) * n).astype(jnp.int32), 1, n)
     return multi_order_statistic(x, ks, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Scalar views of the engine internals (kernel-backend plumbing and tests)
+# ---------------------------------------------------------------------------
+
+
+class _ScalarFnEvaluator:
+    """Adapter lifting a scalar ``eval_fn(t) -> FG`` plus 1-D data into the
+    (B=1,) evaluator protocol — lets callers drive the batched engine with a
+    custom scalar backend (see tests/test_kernels.py)."""
+
+    def __init__(self, x, k, eval_fn):
+        self.x = x = x.reshape(-1)
+        self._eval_fn = eval_fn
+        self.n = jnp.asarray(x.size, jnp.int32)
+        self.k = jnp.clip(jnp.asarray(k, jnp.int32), 1, x.size).reshape(1)
+
+    def __call__(self, y: jax.Array) -> FG:
+        fg = self._eval_fn(y.reshape(()))
+        return FG(*(jnp.reshape(v, (1,)) for v in fg))
+
+    def init_stats(self):
+        x = self.x
+        one = lambda v: jnp.reshape(v, (1,))
+        return (one(jnp.min(x)), one(jnp.max(x)),
+                one(jnp.mean(x, dtype=x.dtype)))
+
+
+def _bracket_loop(x, k, *, method, maxit, cap, eval_fn=None):
+    """Scalar (B=1) view of :func:`bracket_loop_batched`.
+
+    Returns ``(state with (1,)-shaped fields, xmin, xmax)``; ``eval_fn``
+    overrides the data pass with a custom scalar FG backend.
+    """
+    x = x.reshape(-1)
+    if eval_fn is None:
+        ev = RowsEvaluator(x[None, :],
+                           jnp.asarray(k, jnp.int32).reshape(1))
+    else:
+        ev = _ScalarFnEvaluator(x, k, eval_fn)
+    s, xmin, xmax = bracket_loop_batched(ev, method=method, maxit=maxit,
+                                         cap=cap)
+    return s, xmin[0], xmax[0]
+
+
+def _finalize(x, k, s: BatchState, cap, xmin, xmax) -> SelectResult:
+    """Scalar (B=1) view of :func:`_finalize_rows`."""
+    x = x.reshape(-1)
+    one = lambda v: jnp.reshape(jnp.asarray(v), (1,))
+    res = _finalize_rows(
+        x[None, :], jnp.asarray(k, jnp.int32).reshape(1), s, cap,
+        one(xmin).astype(x.dtype), one(xmax).astype(x.dtype))
+    return jax.tree.map(lambda a: a[0], res)

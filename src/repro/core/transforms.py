@@ -30,3 +30,12 @@ def log1p_transform(x: jax.Array):
         return jnp.expm1(y) + x0
 
     return jnp.log1p(x - x0), inverse
+
+
+def log1p_transform_rows(x: jax.Array) -> jax.Array:
+    """Row-wise monotone guard for the batched engine: ``x`` is (B, n) and
+    each row gets its own anchor ``F_i(t) = log1p(t - min(x_i))``.  Only the
+    forward image is needed — the batched finalize maps brackets back by
+    count-preserving preimage reductions, never by the float inverse (see
+    ``selection._map_bracket_back_rows``)."""
+    return jnp.log1p(x - jnp.min(x, axis=1, keepdims=True))

@@ -124,6 +124,83 @@ def _batched_kernel(y_ref, x_ref, fsum_ref, cnt_ref, *, n, block_rows):
     cnt_ref[0, 0, 1] = jnp.sum(jnp.where(valid & (d <= 0), 1, 0).astype(jnp.int32))
 
 
+def _multi_kernel(y_ref, x_ref, fsum_ref, cnt_ref, *, n, npiv, block_rows):
+    """One x tile, ALL K pivots: the tile is read HBM -> VMEM once and the
+    K per-pivot partial quadruples are computed from registers/VMEM — K× less
+    HBM traffic than K independent passes (the win behind shared-x batched
+    selection: a quantile set costs one sweep per iteration, not K).
+
+    K is static (the pivot vector's shape), so the pivot loop is unrolled at
+    trace time; all stores use static indices.
+    """
+    b = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)  # (block_rows, LANES)
+    rows = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    pos = (b * block_rows + rows) * LANES + cols
+    valid = pos < n
+
+    zero = jnp.zeros_like(x)
+    for j in range(npiv):  # static unroll: npiv is a trace-time constant
+        d = x - y_ref[j]
+        fsum_ref[0, j, 0] = jnp.sum(jnp.where(valid & (d > 0), d, zero))
+        fsum_ref[0, j, 1] = jnp.sum(jnp.where(valid & (d < 0), -d, zero))
+        cnt_ref[0, j, 0] = jnp.sum(
+            jnp.where(valid & (d < 0), 1, 0).astype(jnp.int32))
+        cnt_ref[0, j, 1] = jnp.sum(
+            jnp.where(valid & (d <= 0), 1, 0).astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def cp_partials_multi(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_rows: int = DEF_BLOCK_ROWS,
+    interpret: bool = False,
+):
+    """Shared-x multi-pivot partials: ``x`` is (n,), ``y`` is (K,) pivots.
+
+    Returns four (K,) vectors ``(sum_pos, sum_neg, n_lt, n_le)``; count
+    terms bit-identical to ``kernels.ref.cp_partials_multi_ref``.  This is
+    the data pass of shared-x batched selection (``multi_order_statistic`` /
+    ``quantiles``): all K brackets iterate against one sweep of ``x``.
+    """
+    n = x.size
+    npiv = y.shape[0]
+    x = x.reshape(-1)
+    block = block_rows * LANES
+    nblocks = max(1, -(-n // block))
+    padded = nblocks * block
+    if padded != n:
+        # padded tail is masked inside the kernel via the global index
+        x = jnp.pad(x, (0, padded - n))
+    x2 = x.reshape(nblocks * block_rows, LANES)
+    y = jnp.asarray(y, jnp.float32).reshape(npiv)
+
+    fsum, cnt = pl.pallas_call(
+        functools.partial(_multi_kernel, n=n, npiv=npiv,
+                          block_rows=block_rows),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # y: tiny, whole-array
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, npiv, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, npiv, 2), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, npiv, 2), jnp.float32),
+            jax.ShapeDtypeStruct((nblocks, npiv, 2), jnp.int32),
+        ],
+        interpret=interpret,
+    )(y, x2)
+    sums = jnp.sum(fsum, axis=0)
+    cnts = jnp.sum(cnt, axis=0)
+    return sums[:, 0], sums[:, 1], cnts[:, 0], cnts[:, 1]
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def cp_partials_batched(
     x: jax.Array,

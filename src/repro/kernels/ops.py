@@ -44,3 +44,21 @@ def fused_partials_batched(x, y, *, backend: str | None = None):
     if backend == "jnp":
         return ref.cp_partials_batched_ref(x, y)
     raise ValueError(f"unknown backend {backend!r}")
+
+
+def fused_partials_multi(x, y, *, backend: str | None = None):
+    """Shared-x multi-pivot variant: ``x`` (n,), ``y`` (K,) pivots.
+
+    On TPU the multi-pivot kernel reads each x tile into VMEM once and
+    emits partials for every live pivot (K× less HBM traffic than K
+    independent sweeps).
+    """
+    if backend is None:
+        backend = "pallas" if _on_tpu() else "jnp"
+    if backend == "pallas":
+        return cp_objective.cp_partials_multi(x, y)
+    if backend == "pallas_interpret":
+        return cp_objective.cp_partials_multi(x, y, interpret=True)
+    if backend == "jnp":
+        return ref.cp_partials_multi_ref(x, y)
+    raise ValueError(f"unknown backend {backend!r}")

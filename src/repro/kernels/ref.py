@@ -5,10 +5,19 @@ import jax
 import jax.numpy as jnp
 
 
+def _accum_dtype(x):
+    # The TPU kernel accumulates in f32, so the oracle promotes low-precision
+    # inputs (bf16) to f32 for bit-comparable partials — but NEVER downcasts:
+    # f64 selection (x64 mode on CPU) must keep full precision or the count
+    # certificates lie about exactness.
+    return jnp.promote_types(x.dtype, jnp.float32)
+
+
 def cp_partials_ref(x: jax.Array, y: jax.Array):
     """Oracle for kernels.cp_objective.cp_partials."""
-    x = x.reshape(-1).astype(jnp.float32)
-    y = jnp.asarray(y, jnp.float32)
+    dt = _accum_dtype(x)
+    x = x.reshape(-1).astype(dt)
+    y = jnp.asarray(y, dt)
     d = x - y
     sum_pos = jnp.sum(jnp.maximum(d, 0))
     sum_neg = jnp.sum(jnp.maximum(-d, 0))
@@ -19,6 +28,14 @@ def cp_partials_ref(x: jax.Array, y: jax.Array):
 
 def cp_partials_batched_ref(x: jax.Array, y: jax.Array):
     """Oracle for kernels.cp_objective.cp_partials_batched."""
-    return jax.vmap(cp_partials_ref)(
-        x.astype(jnp.float32), jnp.asarray(y, jnp.float32)
+    dt = _accum_dtype(x)
+    return jax.vmap(cp_partials_ref)(x.astype(dt), jnp.asarray(y, dt))
+
+
+def cp_partials_multi_ref(x: jax.Array, y: jax.Array):
+    """Oracle for kernels.cp_objective.cp_partials_multi: one shared ``x``
+    (n,), ``y`` is (K,) pivots; returns four (K,) vectors."""
+    dt = _accum_dtype(x)
+    return jax.vmap(cp_partials_ref, in_axes=(None, 0))(
+        x.reshape(-1).astype(dt), jnp.asarray(y, dt)
     )

@@ -13,13 +13,13 @@ from typing import Optional
 import jax
 
 from repro.configs.base import ModelConfig, ShapeConfig, ShardingPlan
+from repro.core import _compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _compat.make_mesh(shape, axes)
 
 
 def make_plan(cfg: ModelConfig, shape: ShapeConfig,

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShardingPlan
+from repro.core import _compat
 from repro.models.layers import _init, rms_norm, rope, softcap
 
 NEG = -1e30
@@ -340,12 +341,12 @@ def _seqshard_decode(q, k_cache, v_cache, index, cfg, plan, cap):
     from jax.sharding import PartitionSpec as P
     lead = plan.dp_axes if plan.dp_axes else None
     seq = axes if len(axes) > 1 else axes[0]
-    return jax.shard_map(
+    return _compat.shard_map(
         local, mesh=plan.mesh,
         in_specs=(P(lead, None, None, None),
                   P(lead, seq, None, None),
                   P(lead, seq, None, None),
                   P()),
         out_specs=P(lead, None, None, None),
-        check_vma=False,
+        check=False,
     )(q, k_cache, v_cache, jnp.asarray(index, jnp.int32))

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShardingPlan
+from repro.core import _compat
 from repro.models import attention as attn_mod
 from repro.models import encdec, transformer
 from repro.models import moe as moe_mod
@@ -308,8 +309,8 @@ def lm_loss_fused(hidden, embed_params, labels, mask, cfg: ModelConfig,
         cstep = jax.checkpoint(
             cstep, policy=jax.checkpoint_policies.nothing_saveable)
         zero = jnp.zeros((), jnp.float32)
-        (nll, zl, den), _ = jax.lax.scan(cstep, (zero, zero, zero),
-                                         jnp.arange(n_chunks))
+        nll, zl, den = _compat.scan_in_shard_map(
+            cstep, (zero, zero, zero), n_chunks)
         return nll, zl, den
 
     if plan.mesh is None:
@@ -354,14 +355,19 @@ def lm_loss_fused(hidden, embed_params, labels, mask, cfg: ModelConfig,
             zl = jax.lax.psum(zl, lead_axes)
             den = jax.lax.psum(den, lead_axes)
         den = jnp.maximum(den, 1.0)
-        return nll / den, zl / den
+        # (1,)-shaped outputs: pre-0.5 shard_map cannot transpose rank-0
+        # outputs that are not constant over the mesh
+        return (nll / den).reshape(1), (zl / den).reshape(1)
 
-    nll, zl = jax.shard_map(
+    nll, zl = _compat.shard_map(
         body, mesh=plan.mesh,
         in_specs=(P(lead, None, None), wspec, P(lead, None), P(lead, None)),
-        out_specs=(P(), P()),
-        check_vma=False,
-    )(hidden, W, labels, mask)
+        out_specs=(P(None), P(None)),
+        check=False,
+        # f32 labels/mask: pre-0.5 shard_map transposes produce rank-0 zero
+        # cotangents for integer operands, tripping the out-spec rank check
+    )(hidden, W, labels.astype(jnp.float32), mask.astype(jnp.float32))
+    nll, zl = nll[0], zl[0]
     return nll + z_weight * zl, {"nll": nll, "zloss": zl}
 
 
@@ -409,19 +415,22 @@ def _lm_loss_sharded(logits, labels, mask, plan: ShardingPlan,
         cstep = jax.checkpoint(
             cstep, policy=jax.checkpoint_policies.nothing_saveable)
         zero = jnp.zeros((), jnp.float32)
-        (nll, zl, den), _ = jax.lax.scan(cstep, (zero, zero, zero),
-                                         jnp.arange(n_chunks))
+        nll, zl, den = _compat.scan_in_shard_map(
+            cstep, (zero, zero, zero), n_chunks)
         if plan.dp_axes:
             nll = jax.lax.psum(nll, plan.dp_axes)
             zl = jax.lax.psum(zl, plan.dp_axes)
             den = jax.lax.psum(den, plan.dp_axes)
         den = jnp.maximum(den, 1.0)
-        return nll / den, zl / den
+        # (1,)-shaped outputs: see lm_loss_fused
+        return (nll / den).reshape(1), (zl / den).reshape(1)
 
-    nll, zl = jax.shard_map(
+    nll, zl = _compat.shard_map(
         body, mesh=plan.mesh,
         in_specs=(P(lead, None, tpx), P(lead, None), P(lead, None)),
-        out_specs=(P(), P()),
-        check_vma=False,
-    )(logits, labels, mask)
+        out_specs=(P(None), P(None)),
+        check=False,
+        # f32 labels/mask: see lm_loss_fused
+    )(logits, labels.astype(jnp.float32), mask.astype(jnp.float32))
+    nll, zl = nll[0], zl[0]
     return nll + z_weight * zl, {"nll": nll, "zloss": zl}

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShardingPlan
+from repro.core import _compat
 from repro.models.layers import _init, act_fn
 
 
@@ -147,17 +148,20 @@ def moe_apply(p, x, cfg: ModelConfig, plan: ShardingPlan):
         first = jax.lax.axis_index(tpx) * El if ep else 0
         out, aux, z = _grouped_moe(x_local, router, w_gate, w_in, w_out,
                                    cfg, first=first, El=El, Ce=Ce, act=act)
-        return jax.lax.psum(out, tpx), aux, z
+        # (1,)-shaped scalars: pre-0.5 shard_map cannot transpose rank-0
+        # outputs that are not constant over the mesh
+        return (jax.lax.psum(out, tpx), jnp.reshape(aux, (1,)),
+                jnp.reshape(z, (1,)))
 
     if ep:  # expert weights sharded over the model axis
         wspecs = (P(tpx, fsdp, None), P(tpx, fsdp, None), P(tpx, None, fsdp))
     else:   # TP within each expert (ffn dim sharded)
         wspecs = (P(None, fsdp, tpx), P(None, fsdp, tpx), P(None, tpx, fsdp))
 
-    out, aux, z = jax.shard_map(
+    out, aux, z = _compat.shard_map(
         body, mesh=plan.mesh,
         in_specs=(P(lead, None), P(None, None)) + wspecs,
-        out_specs=(P(lead, None), P(), P()),
-        check_vma=False,
+        out_specs=(P(lead, None), P(None), P(None)),
+        check=False,
     )(x2, p["router"], p["w_gate"], p["w_in"], p["w_out"])
-    return out.reshape(B, S, D), aux, z
+    return out.reshape(B, S, D), aux[0], z[0]

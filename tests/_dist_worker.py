@@ -18,7 +18,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
-from repro.core import distributed, selection  # noqa: E402
+from repro.core import _compat, distributed, selection  # noqa: E402
 
 assert jax.device_count() == n_dev, jax.devices()
 
@@ -30,8 +30,7 @@ def check(cond, msg):
 
 
 def main():
-    mesh = jax.make_mesh((n_dev,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = _compat.make_mesh((n_dev,), ("data",))
     rng = np.random.default_rng(0)
 
     # --- sharded_order_statistic vs np.partition, incl. outliers/ties ---
@@ -71,9 +70,9 @@ def main():
             def run(v):
                 return distributed.order_statistic_across_axis(
                     v, k, "data", method=method)
-            got = jax.shard_map(
+            got = _compat.shard_map(
                 run, mesh=mesh,
-                in_specs=P("data"), out_specs=P("data"),
+                in_specs=P("data"), out_specs=P("data"), check=False,
             )(arr)
             got0 = np.asarray(got)[0]  # replicated along data
             want = np.sort(vals, axis=0)[k - 1]

@@ -13,6 +13,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.analysis import analyze_compiled, roofline_terms  # noqa: E402
+from repro.core import _compat  # noqa: E402
 from repro.configs import get_config  # noqa: E402
 from repro.configs.base import ShapeConfig  # noqa: E402
 from repro.launch import inputs as I  # noqa: E402
@@ -29,8 +30,7 @@ def check(cond, msg):
 
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = _compat.make_mesh((2, 4), ("data", "model"))
 
     for arch, strategy in [("gemma2-2b", "tp"), ("mixtral-8x7b", "tp"),
                            ("rwkv6-1.6b", "tp"), ("gemma2-2b", "fsdp"),

@@ -25,7 +25,10 @@ def test_hlo_cost_counts_scan_trips():
     x = jax.ShapeDtypeStruct((n, d), jnp.float32)
     ws = jax.ShapeDtypeStruct((trips, d, d), jnp.float32)
     comp = jax.jit(f).lower(x, ws).compile()
-    raw = comp.cost_analysis()["flops"]
+    ca = comp.cost_analysis()
+    if isinstance(ca, list):  # pre-0.5 jax wraps the dict in a list
+        ca = ca[0]
+    raw = ca["flops"]
     walked = hlo_cost(comp.as_text())
     expect = 2 * n * d * d * trips
     assert walked["flops_dot"] == pytest.approx(expect, rel=0.01)

@@ -1,0 +1,209 @@
+"""Exactness guarantees of the batched-first selection engine.
+
+Rows mode (``select_rows``) and shared-x mode (``multi_order_statistic``)
+must match ``np.partition`` row-wise bit-for-bit, report truthful per-row
+status codes, and survive the hard cases: duplicate-heavy rows, k at the
+extremes, all-equal rows, per-row k vectors, and the log1p monotone guard.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import selection
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def kth_rows(x, ks):
+    """Row-wise np.partition oracle; ks scalar or per-row."""
+    x = np.asarray(x)
+    ks = np.broadcast_to(np.asarray(ks), (x.shape[0],))
+    return np.array([np.partition(row, k - 1)[k - 1]
+                     for row, k in zip(x, ks)], x.dtype)
+
+
+@pytest.mark.parametrize("b,n", [(1, 1000), (8, 4096), (33, 257)])
+@pytest.mark.parametrize("method", ["cp", "bisection", "sort"])
+def test_rows_match_partition(b, n, method):
+    rng = np.random.default_rng(b * n)
+    x = rng.standard_normal((b, n)).astype(np.float32)
+    ks = rng.integers(1, n + 1, size=b).astype(np.int32)
+    res = selection.select_rows(jnp.asarray(x), jnp.asarray(ks),
+                                method=method, maxit=256)
+    np.testing.assert_array_equal(np.asarray(res.value), kth_rows(x, ks))
+    assert res.value.shape == (b,)
+    assert int(jnp.max(res.status)) <= selection.TIE_FALLBACK
+
+
+def test_rows_scalar_k_broadcasts():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((5, 2048)).astype(np.float32)
+    k = 1024
+    res = selection.select_rows(jnp.asarray(x), k)
+    np.testing.assert_array_equal(np.asarray(res.value), kth_rows(x, k))
+
+
+def test_rows_status_codes_truthful():
+    """EXACT_HIT / HYBRID_SORT / TIE_FALLBACK per row, each certified."""
+    rng = np.random.default_rng(1)
+    n = 8192
+    rows = [
+        rng.standard_normal(n),                      # generic: hybrid/exact
+        np.full(n, 3.25),                            # all-equal: exact @ min
+        np.concatenate([np.full(n - 100, 0.5),       # > cap duplicates of
+                        rng.standard_normal(100)]),  # the answer: fallback
+    ]
+    x = np.stack(rows).astype(np.float32)
+    ks = np.array([n // 2, n // 2, n // 2], np.int32)
+    res = selection.select_rows(jnp.asarray(x), jnp.asarray(ks),
+                                cap=64, maxit=64)
+    np.testing.assert_array_equal(np.asarray(res.value), kth_rows(x, ks))
+    st = np.asarray(res.status)
+    assert st[1] == selection.EXACT_HIT          # all-equal -> min shortcut
+    assert st[2] in (selection.EXACT_HIT, selection.TIE_FALLBACK)
+    assert np.all(st != selection.NOT_CONVERGED)
+
+
+def test_rows_duplicate_heavy():
+    """Every row mostly ties, answers inside tie blocks, tiny cap."""
+    rng = np.random.default_rng(2)
+    b, n = 6, 5000
+    x = rng.integers(0, 4, size=(b, n)).astype(np.float32)
+    ks = rng.integers(1, n + 1, size=b).astype(np.int32)
+    res = selection.select_rows(jnp.asarray(x), jnp.asarray(ks), cap=8)
+    np.testing.assert_array_equal(np.asarray(res.value), kth_rows(x, ks))
+
+
+def test_rows_k_at_extremes():
+    rng = np.random.default_rng(3)
+    n = 3000
+    x = rng.standard_normal((4, n)).astype(np.float32)
+    for ks in ([1, 1, 1, 1], [n, n, n, n]):
+        res = selection.select_rows(jnp.asarray(x),
+                                    jnp.asarray(ks, jnp.int32), cap=16)
+        np.testing.assert_array_equal(np.asarray(res.value), kth_rows(x, ks))
+        # k=1 / k=n always resolve through the extreme-tie shortcut
+        assert np.all(np.asarray(res.status) == selection.EXACT_HIT)
+    ks = [1, 2, n - 1, n]
+    res = selection.select_rows(jnp.asarray(x), jnp.asarray(ks, jnp.int32),
+                                cap=16)
+    np.testing.assert_array_equal(np.asarray(res.value), kth_rows(x, ks))
+    assert np.all(np.asarray(res.status) != selection.NOT_CONVERGED)
+
+
+def test_rows_per_row_iters():
+    """A frozen row's iteration counter stops; live rows keep going."""
+    rng = np.random.default_rng(4)
+    n = 20_000
+    easy = np.full(n, 1.0)                      # exact at min immediately
+    hard = rng.standard_normal(n)
+    x = np.stack([easy, hard]).astype(np.float32)
+    res = selection.select_rows(jnp.asarray(x), (n + 1) // 2, cap=64)
+    iters = np.asarray(res.iters)
+    assert iters[0] < iters[1]
+
+
+def test_rows_log1p_transform():
+    """Per-row monotone guard: huge-magnitude rows stay exact."""
+    rng = np.random.default_rng(5)
+    b, n = 4, 16_384
+    x = rng.standard_normal((b, n)).astype(np.float32)
+    x[:, :16] = 1e20
+    x[2] *= 1e10
+    ks = np.array([n // 2, 1, n // 3, n], np.int32)
+    res = selection.select_rows(jnp.asarray(x), jnp.asarray(ks),
+                                transform="log1p")
+    np.testing.assert_array_equal(np.asarray(res.value), kth_rows(x, ks))
+
+
+def test_rows_matches_scalar_view():
+    """order_statistic IS select_rows at B=1 — identical results/statuses."""
+    rng = np.random.default_rng(6)
+    x = rng.standard_normal((3, 9999)).astype(np.float32)
+    ks = [17, 5000, 9999]
+    batched = selection.select_rows(jnp.asarray(x),
+                                    jnp.asarray(ks, jnp.int32), cap=128)
+    for i, k in enumerate(ks):
+        scalar = selection.order_statistic(jnp.asarray(x[i]), k, cap=128)
+        assert float(batched.value[i]) == float(scalar.value)
+        assert int(batched.status[i]) == int(scalar.status)
+
+
+def test_rows_jit_traced_ks():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((4, 1024)).astype(np.float32))
+
+    @jax.jit
+    def f(x, ks):
+        return selection.select_rows(x, ks).value
+
+    ks = jnp.asarray([1, 10, 512, 1024], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(f(x, ks)),
+                                  kth_rows(np.asarray(x), np.asarray(ks)))
+
+
+# ---------------------------------------------------------------------------
+# shared-x mode
+# ---------------------------------------------------------------------------
+
+
+def test_shared_multi_order_statistic_exact():
+    rng = np.random.default_rng(8)
+    n = 50_001
+    x = rng.standard_normal(n).astype(np.float32)
+    ks = np.array([1, 7, n // 4, n // 2, n - 1, n], np.int32)
+    res = selection.multi_order_statistic(jnp.asarray(x), jnp.asarray(ks))
+    want = np.partition(x, ks - 1)[ks - 1]
+    np.testing.assert_array_equal(np.asarray(res.value), want)
+    assert np.all(np.asarray(res.status) != selection.NOT_CONVERGED)
+
+
+def test_shared_duplicate_heavy_small_cap():
+    rng = np.random.default_rng(9)
+    x = rng.integers(0, 5, 30_000).astype(np.float32)
+    ks = np.array([1, 10_000, 15_000, 29_999], np.int32)
+    res = selection.multi_order_statistic(jnp.asarray(x), jnp.asarray(ks),
+                                          cap=8)
+    want = np.partition(x, ks - 1)[ks - 1]
+    np.testing.assert_array_equal(np.asarray(res.value), want)
+
+
+def test_shared_log1p_transform():
+    rng = np.random.default_rng(10)
+    n = 32_768
+    x = rng.standard_normal(n).astype(np.float32)
+    x[:16] = 1e20
+    ks = np.array([n // 4, n // 2, n], np.int32)
+    res = selection.multi_order_statistic(jnp.asarray(x), jnp.asarray(ks),
+                                          transform="log1p")
+    want = np.partition(x, ks - 1)[ks - 1]
+    np.testing.assert_array_equal(np.asarray(res.value), want)
+
+
+def test_shared_backend_interpret_parity():
+    """Shared-x solve driven by the multi-pivot Pallas kernel (interpret)."""
+    rng = np.random.default_rng(11)
+    n = 4096
+    x = rng.standard_normal(n).astype(np.float32)
+    ks = np.array([1, 100, 2048, 4096], np.int32)
+    res_jnp = selection.multi_order_statistic(
+        jnp.asarray(x), jnp.asarray(ks), backend="jnp")
+    res_pal = selection.multi_order_statistic(
+        jnp.asarray(x), jnp.asarray(ks), backend="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(res_jnp.value),
+                                  np.asarray(res_pal.value))
+    want = np.partition(x, ks - 1)[ks - 1]
+    np.testing.assert_array_equal(np.asarray(res_jnp.value), want)
+
+
+def test_quantiles_use_shared_mode():
+    rng = np.random.default_rng(12)
+    x = np.abs(rng.standard_normal(10_000)).astype(np.float32)
+    qs = [0.01, 0.25, 0.5, 0.75, 0.99, 1.0]
+    res = selection.quantiles(jnp.asarray(x), qs)
+    for i, q in enumerate(qs):
+        k = max(1, int(np.ceil(q * x.size)))
+        np.testing.assert_equal(np.float32(res.value[i]),
+                                np.partition(x, k - 1)[k - 1])

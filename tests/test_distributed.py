@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import distributed
+from repro.core import _compat, distributed
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -23,8 +23,7 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 def test_single_device_mesh_path():
     """shard_map path with a 1-device mesh (API-level sanity)."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = _compat.make_mesh((1,), ("data",))
     rng = np.random.default_rng(1)
     x = rng.standard_normal(10_000).astype(np.float32)
     k = 2500
@@ -34,16 +33,15 @@ def test_single_device_mesh_path():
 
 
 def test_across_axis_single_device():
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = _compat.make_mesh((1,), ("data",))
     rng = np.random.default_rng(2)
     v = rng.standard_normal((1, 17)).astype(np.float32)
 
     def run(vl):
         return distributed.median_across_axis(vl, "data", method="cp")
 
-    got = jax.shard_map(run, mesh=mesh, in_specs=P("data"),
-                        out_specs=P("data"))(jnp.asarray(v))
+    got = _compat.shard_map(run, mesh=mesh, in_specs=P("data"),
+                            out_specs=P("data"), check=False)(jnp.asarray(v))
     np.testing.assert_allclose(np.asarray(got)[0], v[0])
 
 

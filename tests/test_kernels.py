@@ -71,6 +71,48 @@ def test_cp_partials_batched(bsz, n):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
 
+@pytest.mark.parametrize("n,npiv", [(1, 1), (100, 3), (1024, 8), (4097, 5),
+                                    (65537, 2)])
+def test_cp_partials_multi(n, npiv):
+    """Multi-pivot kernel (interpret) vs the jnp oracle, shape sweep."""
+    rng = np.random.default_rng(n * npiv)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal(npiv).astype(np.float32))
+    got = cp_objective.cp_partials_multi(x, y, block_rows=8, interpret=True)
+    want = ref.cp_partials_multi_ref(x, y)
+    for g, w in zip(got[:2], want[:2]):
+        np.testing.assert_allclose(np.float32(g), np.float32(w), rtol=2e-5,
+                                   atol=1e-5)
+    for g, w in zip(got[2:], want[2:]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_cp_partials_multi_ties_and_extremes():
+    """Pivots sitting ON data values exercise the tie lanes of every pivot
+    slot; one pivot outside the data range exercises the all-below case."""
+    x = jnp.asarray(
+        np.array([0.0, 0.0, 0.0, 1e9, -1e9, 0.5, 0.5, -0.5] * 97, np.float32)
+    )
+    y = jnp.asarray(np.array([0.0, 0.5, -0.5, 1e9, -1e9, 2e9], np.float32))
+    got = cp_objective.cp_partials_multi(x, y, block_rows=8, interpret=True)
+    want = ref.cp_partials_multi_ref(x, y)
+    for g, w in zip(got[2:], want[2:]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_ops_dispatch_multi():
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.standard_normal(4096).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal(4).astype(np.float32))
+    a = ops.fused_partials_multi(x, y, backend="jnp")
+    b = ops.fused_partials_multi(x, y, backend="pallas_interpret")
+    for g, w in zip(b[:2], a[:2]):
+        np.testing.assert_allclose(np.float32(g), np.float32(w), rtol=2e-5,
+                                   atol=1e-5)
+    for g, w in zip(b[2:], a[2:]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
 def test_ops_dispatch():
     rng = np.random.default_rng(42)
     x = jnp.asarray(rng.standard_normal(4096).astype(np.float32))

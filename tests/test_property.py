@@ -10,7 +10,9 @@ import pytest
 
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import selection
 from repro.core.objective import eval_fg

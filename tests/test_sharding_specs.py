@@ -24,8 +24,10 @@ def mesh():
     # construction is enough for spec validation; nothing is compiled here)
     import jax.sharding as js
     devs = np.array(jax.devices() * 256).reshape(16, 16)
-    return js.Mesh(devs, ("data", "model"),
-                   axis_types=(js.AxisType.Auto,) * 2)
+    if hasattr(js, "AxisType"):
+        return js.Mesh(devs, ("data", "model"),
+                       axis_types=(js.AxisType.Auto,) * 2)
+    return js.Mesh(devs, ("data", "model"))
 
 
 def _axes_of(spec):
