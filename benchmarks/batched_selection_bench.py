@@ -1,13 +1,19 @@
-"""Batched engine vs vmap-of-scalar-solver vs jnp.sort over a (B, n) grid.
+"""Batched engine (cp vs binned) vs vmap-of-scalar-solver vs jnp.sort.
 
-The tentpole claim of the batched-first refactor: one engine iterating a
-(B,) state block beats B lock-stepped scalar solvers (``jax.vmap`` of the
-public scalar API — exactly how the pre-refactor hot paths ran) and the
-full-sort baseline, while staying bit-identical to ``np.partition`` row-wise.
+Two tentpole claims ride this bench:
 
-Emits the usual CSV rows plus one ``BENCH_JSON`` line (machine-readable
-perf-trajectory record: every configuration with us/call for all three
-implementations and the batched/vmap speedup).
+* PR 1 (batched-first): one engine iterating a (B,) state block beats B
+  lock-stepped scalar solvers (``jax.vmap`` of the public scalar API) and
+  the full-sort baseline, bit-identical to ``np.partition`` row-wise.
+* PR 2 (binned bracket descent): ``method='binned'`` resolves a solve in
+  ~2-3 histogram sweeps where ``method='cp'`` needs ~10-20 fused passes —
+  the ``sweeps_binned`` / ``iters_cp`` columns are the data-pass counts per
+  solve (each binned sweep and each cp iteration is exactly one pass over
+  the (B, n) block).
+
+Emits the usual CSV rows plus one ``BENCH_JSON`` line; ``run(json_path=...)``
+(the ``benchmarks/run.py --json`` path) additionally writes the records to a
+machine-readable perf-trajectory file (``BENCH_selection.json``).
 """
 from __future__ import annotations
 
@@ -22,52 +28,74 @@ from benchmarks.common import emit, timeit
 from repro.core import selection
 
 
-def run(full: bool = False):
-    grid_b = [1, 8, 64] + ([256] if full else [])
-    grid_n = [1 << 12, 1 << 16] + ([1 << 20] if full else [])
+def run(full: bool = False, json_path: str | None = None):
+    # quick mode keeps CI under a minute but still covers an n >= 1e6 point
+    # (where the binned pass-count advantage is the whole story)
+    grid = [(1, 1 << 12), (8, 1 << 12), (64, 1 << 12),
+            (1, 1 << 16), (8, 1 << 16), (64, 1 << 16),
+            (1, 1 << 20), (8, 1 << 20)]
+    if full:
+        grid += [(256, 1 << 16), (64, 1 << 20), (1, 1 << 24)]
     rng = np.random.default_rng(0)
     rows, records = [], []
-    for n in grid_n:
-        for b in grid_b:
-            x = rng.standard_normal((b, n)).astype(np.float32)
-            xj = jnp.asarray(x)
-            k = (n + 1) // 2
-            want = np.partition(x, k - 1, axis=1)[:, k - 1]
+    for b, n in grid:
+        x = rng.standard_normal((b, n)).astype(np.float32)
+        xj = jnp.asarray(x)
+        k = (n + 1) // 2
+        want = np.partition(x, k - 1, axis=1)[:, k - 1]
 
-            vmapped = jax.jit(jax.vmap(
-                lambda xi: selection.order_statistic(xi, k).value))
-            batched = jax.jit(
-                lambda v: selection.select_rows(v, k).value)
-            sort = jax.jit(lambda v: jnp.sort(v, axis=1)[:, k - 1])
+        vmapped = jax.jit(jax.vmap(
+            lambda xi: selection.order_statistic(xi, k, method="cp").value))
+        batched_cp = jax.jit(
+            lambda v: selection.select_rows(v, k, method="cp").value)
+        batched_binned = jax.jit(
+            lambda v: selection.select_rows(v, k, method="binned").value)
+        sort = jax.jit(lambda v: jnp.sort(v, axis=1)[:, k - 1])
 
-            impls = {"vmap_scalar": vmapped, "batched": batched,
-                     "sort": sort}
-            times = {}
-            for name, fn in impls.items():
-                got = np.asarray(fn(xj))
-                assert np.array_equal(got, want), (name, b, n)
-                times[name] = timeit(fn, xj, reps=3)
+        impls = {"vmap_scalar": vmapped, "batched_cp": batched_cp,
+                 "batched_binned": batched_binned, "sort": sort}
+        times = {}
+        for name, fn in impls.items():
+            got = np.asarray(fn(xj))
+            assert np.array_equal(got, want), (name, b, n)
+            times[name] = timeit(fn, xj, reps=3)
 
-            res = selection.select_rows(xj, k)
-            iters = int(jnp.max(res.iters))
-            speedup = times["vmap_scalar"] / times["batched"]
-            for name, t in times.items():
-                rows.append((
-                    f"{name}/B={b}/n={n}", t * 1e6,
-                    f"{b * n / t / 1e6:.1f}Melem/s",
-                ))
-            rows.append((f"speedup_batched_over_vmap/B={b}/n={n}",
-                         speedup, f"iters={iters}"))
-            records.append(dict(
-                B=b, n=n, k=k, iters=iters,
-                us_vmap=times["vmap_scalar"] * 1e6,
-                us_batched=times["batched"] * 1e6,
-                us_sort=times["sort"] * 1e6,
-                speedup_batched_over_vmap=speedup,
+        # data-pass counts per solve: one fused pass per cp iteration, one
+        # histogram sweep per binned iteration (max over rows)
+        iters_cp = int(jnp.max(
+            selection.select_rows(xj, k, method="cp").iters))
+        sweeps_binned = int(jnp.max(
+            selection.select_rows(xj, k, method="binned").iters))
+        speedup = times["vmap_scalar"] / times["batched_cp"]
+        for name, t in times.items():
+            rows.append((
+                f"{name}/B={b}/n={n}", t * 1e6,
+                f"{b * n / t / 1e6:.1f}Melem/s",
             ))
+        rows.append((f"speedup_batched_over_vmap/B={b}/n={n}",
+                     speedup, f"iters={iters_cp}"))
+        rows.append((f"passes_binned_vs_cp/B={b}/n={n}",
+                     sweeps_binned, f"cp={iters_cp}"))
+        records.append(dict(
+            B=b, n=n, k=k,
+            iters_cp=iters_cp, sweeps=sweeps_binned,
+            us_vmap=times["vmap_scalar"] * 1e6,
+            us_batched_cp=times["batched_cp"] * 1e6,
+            us_per_call=times["batched_binned"] * 1e6,  # the binned engine
+            us_sort=times["sort"] * 1e6,
+            speedup_batched_over_vmap=speedup,
+            speedup_binned_over_cp=times["batched_cp"]
+            / times["batched_binned"],
+        ))
     emit(rows)
-    print("BENCH_JSON " + json.dumps(
-        {"bench": "batched_selection", "exact": True, "grid": records}))
+    payload = {"bench": "batched_selection", "exact": True,
+               "backend": jax.default_backend(), "grid": records}
+    print("BENCH_JSON " + json.dumps(payload))
+    if json_path is not None:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {json_path}")
     return rows
 
 

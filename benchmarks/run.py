@@ -9,12 +9,18 @@
   roofline_bench       EXPERIMENTS.md §Roofline source (from dry-run cache)
 
 Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses paper-scale sizes.
+``--json`` additionally writes the selection perf trajectory (grid point,
+us_per_call, binned sweeps vs cp iterations) to repo-root
+``BENCH_selection.json`` — the machine-readable record each perf PR updates.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import traceback
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def main() -> None:
@@ -22,6 +28,9 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale array sizes (slow on CPU)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", action="store_true",
+                    help="write repo-root BENCH_selection.json from the "
+                         "batched_selection grid")
     args = ap.parse_args()
 
     # f64 columns of Table II need x64 (benchmarks run in their own process;
@@ -55,8 +64,11 @@ def main() -> None:
         if args.only and name != args.only:
             continue
         print(f"\n### bench: {name}")
+        kw = {}
+        if args.json and name == "batched_selection":
+            kw["json_path"] = os.path.join(ROOT, "BENCH_selection.json")
         try:
-            mod.run(full=args.full)
+            mod.run(full=args.full, **kw)
         except Exception:
             traceback.print_exc()
             failed.append(name)

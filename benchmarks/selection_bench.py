@@ -41,7 +41,7 @@ def run(full: bool = False):
             rows.append((f"numpy_select/{dname}/n={n}", t * 1e6,
                          f"{n / t / 1e6:.1f}Melem/s"))
 
-            for method in ["sort", "cp", "bisection", "brent"]:
+            for method in ["sort", "cp", "binned", "bisection", "brent"]:
                 fn = jax.jit(
                     lambda v, m=method: selection.order_statistic(
                         v, k, method=m, maxit=256).value)

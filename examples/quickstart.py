@@ -29,7 +29,7 @@ def main():
     truth = np.partition(x, k - 1)[k - 1]
     print(f"n={n}, true median={truth}")
 
-    for method in ["sort", "cp", "bisection", "golden", "brent"]:
+    for method in ["sort", "cp", "binned", "bisection", "golden", "brent"]:
         fn = jax.jit(lambda v: selection.order_statistic(
             v, k, method=method, maxit=256).value)
         fn(xj).block_until_ready()  # compile
@@ -43,7 +43,7 @@ def main():
 
     print("\nWith one 1e9 outlier (paper Fig. 5):")
     x2 = x.copy(); x2[0] = 1e9
-    for method in ["cp", "bisection"]:
+    for method in ["cp", "binned", "bisection"]:
         res = selection.order_statistic(jnp.asarray(x2), k, method=method,
                                         maxit=256)
         print(f"  {method:10s}: iters={int(res.iters):3d} "

@@ -110,6 +110,8 @@ def local_order_statistic(
     maxit: int = 64,
     cap_local: int = 4096,
     backend: Optional[str] = None,
+    method: str = "binned",
+    nbins: int = selection.DEF_NBINS,
 ) -> selection.SelectResult:
     """k-th smallest of the *global* (sharded) array; call inside shard_map.
 
@@ -117,11 +119,17 @@ def local_order_statistic(
     same guarantees as ``selection.order_statistic``; the count-based
     stopping rule bounds the *per-shard* in-bracket count so the local
     fixed-capacity compaction never overflows regardless of shard imbalance.
+
+    ``method='binned'`` (default) narrows by histogram sweeps: each round is
+    one local binned pass + a psum of the ``(nbins + 2,)`` slot-count vector
+    — the bracket shrinks by a factor of ``nbins`` per collective round, so
+    the whole solve is ~3 rounds where the cutting-plane loop (``'cp'``)
+    takes ~15-40 psums of the four scalars.
     """
     x_local = x_local.reshape(-1)
     n_local = x_local.size
     # the evaluator owns the data layout: local fused pass (Pallas on TPU)
-    # + psum of the four additive partials is the whole multi-device story
+    # + psum of the additive partials is the whole multi-device story
     ev = ShardedEvaluator(x_local, k, axes, backend=backend)
     n, kk = ev.n, ev.k
     dtype = x_local.dtype
@@ -177,7 +185,57 @@ def local_order_statistic(
             it=s.it + 1,
         )
 
-    s = jax.lax.while_loop(cond, body, s0)
+    def binned_cond(carry):
+        s, stalled = carry
+        return ((~s.found_exact) & ~stalled & (s.max_in > cap_local)
+                & (s.it < maxit) & (s.yR > s.yL))
+
+    def binned_body(carry):
+        from repro.kernels.ref import bin_edges  # deferred: core <-> kernels
+
+        s, stalled = carry
+        # realized edges computed ONCE, shared by the local data pass and
+        # the narrowing decision (the exactness contract); the cross-device
+        # combine is a psum of the slot-count vector (additive, exactly
+        # like the FG quadruple)
+        edges = bin_edges(s.yL, s.yR, nbins)
+        cnt_loc, _ = ev.local_histogram(edges)
+        cum = jnp.cumsum(_psum(cnt_loc, axes)[:-1])
+        # the narrowing decision + exactness certificates are the one shared
+        # implementation in selection.binned_descent_step
+        yLn, yRn, _, _, jm1, jstar, hit_lo, exact, stall = \
+            selection.binned_descent_step(cum, edges, s.yL, s.yR, kk)
+        # local prefix counts at the chosen edges: the per-shard analogue of
+        # the CP loop's le_loc bookkeeping (bounds the local compaction)
+        cum_loc = jnp.cumsum(cnt_loc[:-1])
+        locL, locR = cum_loc[jm1], cum_loc[jstar]
+        upd = ~exact & ~stall
+        loc_cleL = jnp.where(upd, locL, s.loc_cleL)
+        loc_cleR = jnp.where(upd, locR, s.loc_cleR)
+        return _DistState(
+            yL=jnp.where(upd, yLn, s.yL), fL=s.fL, gL=s.gL,
+            yR=jnp.where(upd, yRn, s.yR), fR=s.fR, gR=s.gR,
+            loc_cleL=loc_cleL, loc_cleR=loc_cleR,
+            max_in=_pmax(loc_cleR - loc_cleL, axes),
+            t_exact=jnp.where(exact, jnp.where(hit_lo, s.yL, yRn),
+                              s.t_exact),
+            found_exact=s.found_exact | exact,
+            it=s.it + 1,
+        ), stalled | stall
+
+    if method == "binned":
+        # brackets narrow to realized f32 edge values — keep the bracket
+        # state at (at least) the kernels' f32 accumulation precision
+        dt = jnp.promote_types(dtype, jnp.float32)
+        s0 = s0._replace(yL=s0.yL.astype(dt), yR=s0.yR.astype(dt),
+                         t_exact=s0.t_exact.astype(dt))
+        s, _ = jax.lax.while_loop(binned_cond, binned_body,
+                                  (s0, jnp.asarray(False)))
+    elif method == "cp":
+        s = jax.lax.while_loop(cond, body, s0)
+    else:
+        raise ValueError(f"unknown method {method!r}; one of ('binned', "
+                         "'cp')")
 
     # ---- distributed hybrid finalize (compact per shard, gather, sort) ----
     big = jnp.asarray(jnp.inf, dtype)
@@ -277,6 +335,12 @@ def axis_evaluator(v_local: jax.Array, k, axes: AxisNames) -> FnEvaluator:
     device along ``axes``.  The psum combine of the four additive partials
     is the whole communication story — per iteration the wire carries four
     S-shaped vectors, never the replica data.
+
+    The histogram pass (``method='binned'``) works the same way: each
+    device one-hots its single replica value against the per-coordinate bin
+    edges and the psum of the ``(S..., nbins + 2)`` count vectors is the
+    full cross-replica histogram — one collective round buys log2(nbins)
+    bisection steps for every coordinate at once.
     """
     axes_t = _axes_tuple(axes)
     v = v_local.astype(jnp.float32)
@@ -291,11 +355,23 @@ def axis_evaluator(v_local: jax.Array, k, axes: AxisNames) -> FnEvaluator:
                 _psum((d < 0).astype(jnp.int32), axes_t),
                 _psum((d <= 0).astype(jnp.int32), axes_t))
 
+    def histogram(edges):                              # (S..., nbins + 1)
+        cap = jnp.full_like(edges[..., :1], jnp.inf)
+        lower = jnp.concatenate([-cap, edges], axis=-1)
+        upper = jnp.concatenate([edges, cap], axis=-1)
+        # slot 0 escapes the strict lower test (`v > -inf` would drop
+        # v == -inf), matching the kernels' slot layout
+        first = jnp.arange(edges.shape[-1] + 1) == 0
+        m = ((v[..., None] > lower) | first) & (v[..., None] <= upper)
+        # counts only: the engine's binned descent never reads the sums
+        # here, and psumming them would double the wire bytes for nothing
+        return _psum(m.astype(jnp.int32), axes_t), None
+
     def init_stats():
         return (_pmin(v, axes_t), _pmax(v, axes_t),
                 _psum(v, axes_t) / n_rep.astype(jnp.float32))
 
-    return FnEvaluator(partials, n_rep, kk, init_stats)
+    return FnEvaluator(partials, n_rep, kk, init_stats, histogram=histogram)
 
 
 def order_statistic_across_axis(
@@ -306,6 +382,7 @@ def order_statistic_across_axis(
     maxit: int = 48,
     method: str = "auto",
     gather_threshold: int = 32,
+    nbins: int = 32,
 ) -> jax.Array:
     """Coordinate-wise k-th order statistic across a mesh axis.
 
@@ -315,18 +392,37 @@ def order_statistic_across_axis(
     smallest across replicas, per coordinate.  This is the building block of
     robust gradient aggregation.
 
-    method='gather' all-gathers the replica dimension and sorts locally
-    (cheapest for small replica counts); method='cp' runs the batched
-    selection engine (``selection.bracket_loop_batched``) over an
-    :func:`axis_evaluator` — per-coordinate psum reductions, O(1) memory
-    (the paper's method, for when the replica dimension is large or memory
-    is tight).  'auto' picks by replica count.
+    method='gather' all-gathers the replica dimension and sorts locally;
+    method='binned' runs histogram bracket descent over an
+    :func:`axis_evaluator` — each collective round psums per-coordinate
+    ``(nbins + 2,)`` count vectors and shrinks every bracket by a factor of
+    ``nbins``, resolving in ~3 rounds where the cutting-plane loop
+    (method='cp') psums four scalars per coordinate for ~n_rep-ish rounds;
+    method='cp' is the paper's O(1)-memory cutting-plane iteration.
+
+    method='auto' resolves STATICALLY (mesh axis sizes are trace-time
+    constants) by replica count: 'gather' when ``n_rep <= gather_threshold``
+    (default 32), else 'binned'.  Rationale: the all-gather materializes an
+    ``(n_rep, S)`` buffer and sorts it — unbeatable while that buffer is a
+    few shard-sizes, a memory blowup beyond; binned keeps O(S) memory and a
+    round count independent of ``n_rep``.  Callers can override either the
+    threshold or the method outright.
+
+    Caveat: the count-based methods ('cp' and 'binned') see values through
+    the platform's comparison/arithmetic semantics, so on FTZ hardware
+    (XLA:CPU, some accelerator modes) coordinates whose replica values are
+    DENORMAL-scale collapse to 0 — 'gather' (sort-based) keeps them.
+    Gradient coordinates at 1e-44 carry no usable signal, so 'auto' does
+    not branch on this; pass ``method='gather'`` explicitly if sub-normal
+    resolution matters.
     """
     axes_t = _axes_tuple(axes)
     n_rep = _psum(jnp.asarray(1, jnp.int32), axes_t)
 
     if method == "auto":
-        method = "gather"  # resolved statically below if possible
+        # lax.psum of a python int constant-folds to the (static) axis size
+        method = ("gather" if jax.lax.psum(1, axes_t) <= gather_threshold
+                  else "binned")
 
     if method == "gather":
         g = v_local
@@ -337,7 +433,7 @@ def order_statistic_across_axis(
         idx = jnp.clip(jnp.asarray(k, jnp.int32) - 1, 0, g.shape[0] - 1)
         return jnp.take(gs, idx, axis=0)
 
-    if method != "cp":
+    if method not in ("cp", "binned"):
         raise ValueError(f"unknown method {method!r}")
 
     v = v_local.astype(jnp.float32)
@@ -355,11 +451,19 @@ def order_statistic_across_axis(
     found0 = at_min | at_max
     t0 = jnp.where(at_min, yL0, jnp.where(at_max, yR0, jnp.nan))
 
-    # cap=0: iterate to exact hit (or maxit) — there is no compaction stage
-    # here (the replica data never leaves its device), so the finalize is
-    # certificate + tie-fallback only
-    s, _, _ = selection.bracket_loop_batched(
-        ev, method="cp", maxit=maxit, cap=0, found0=found0, t0=t0)
+    if method == "binned":
+        # cap=1: a round ends for a coordinate once a single replica value
+        # is bracketed (the vnext fallback below recovers it exactly) or a
+        # binned certificate fires; ~3 psum rounds of (nbins+2,) counts
+        # replace ~n_rep-ish rounds of scalar-quadruple psums
+        s, _, _ = selection.binned_loop_batched(
+            ev, nbins=nbins, maxit=maxit, cap=1, found0=found0, t0=t0)
+    else:
+        # cap=0: iterate to exact hit (or maxit) — there is no compaction
+        # stage here (the replica data never leaves its device), so the
+        # finalize is certificate + tie-fallback only
+        s, _, _ = selection.bracket_loop_batched(
+            ev, method="cp", maxit=maxit, cap=0, found0=found0, t0=t0)
 
     # tie fallback for coordinates that did not exact-hit: next distinct
     # value above yL, certified by counts (one extra pair of psums).

@@ -56,7 +56,7 @@ Scalar selection is just the ``B=1`` view of the rows regime.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Protocol
+from typing import Callable, NamedTuple, Optional, Protocol
 
 import jax
 import jax.numpy as jnp
@@ -132,7 +132,22 @@ class Evaluator(Protocol):
     fields.  ``n`` is the per-problem element count (``(B,)`` or scalar),
     ``k`` the 1-indexed target ranks ``(B,)``.  ``init_stats`` returns
     per-problem ``(min, max, mean)`` — one extra fused pass, used to seat the
-    initial bracket and cutting planes analytically."""
+    initial bracket and cutting planes analytically.
+
+    ``histogram`` is the binned data pass behind ``method='binned'``: per
+    problem, bin the data against the caller-supplied REALIZED bracket
+    edges ``(B, nbins + 1)`` (built once per sweep by the engine via
+    ``kernels.ref.bin_edges`` — implementations must only COMPARE against
+    them, never recompute edge arithmetic) and return additive
+    ``(count, sum)`` slot vectors of shape ``(B, nbins + 2)`` (slot layout
+    documented in ``kernels.ref.cp_histogram_ref``).  One sweep narrows
+    every live bracket by a factor of ``nbins`` — log2(nbins)
+    bisection-equivalents per data pass — and, like the FG quadruple, the
+    slot vectors combine additively across blocks/shards (a psum of
+    ``nbins + 2`` ints per problem is the whole multi-device story).  The
+    engine only reads the counts; implementations whose transport makes
+    the sums costly (the distributed evaluators) may return ``None`` in
+    their place."""
 
     n: jax.Array
     k: jax.Array
@@ -140,6 +155,8 @@ class Evaluator(Protocol):
     def __call__(self, y: jax.Array) -> FG: ...
 
     def init_stats(self) -> tuple[jax.Array, jax.Array, jax.Array]: ...
+
+    def histogram(self, edges: jax.Array) -> tuple[jax.Array, jax.Array]: ...
 
 
 class RowsEvaluator:
@@ -152,6 +169,8 @@ class RowsEvaluator:
     def __init__(self, x: jax.Array, k, *, backend: str | None = None):
         from repro.kernels import ops as kops  # deferred: core <-> kernels
 
+        self._kops = kops
+        self._backend = backend
         self._partials = lambda y: kops.fused_partials_batched(
             x, y, backend=backend)
         self.x = x
@@ -161,6 +180,10 @@ class RowsEvaluator:
 
     def __call__(self, y: jax.Array) -> FG:
         return fg_from_partials(self._partials(y), self.n, self.k)
+
+    def histogram(self, edges):
+        return self._kops.fused_histogram_batched(
+            self.x, edges, backend=self._backend)
 
     def init_stats(self):
         x = self.x
@@ -179,6 +202,8 @@ class SharedEvaluator:
     def __init__(self, x: jax.Array, ks, *, backend: str | None = None):
         from repro.kernels import ops as kops  # deferred: core <-> kernels
 
+        self._kops = kops
+        self._backend = backend
         self.x = x = x.reshape(-1)
         self._partials = lambda y: kops.fused_partials_multi(
             x, y, backend=backend)
@@ -187,6 +212,10 @@ class SharedEvaluator:
 
     def __call__(self, y: jax.Array) -> FG:
         return fg_from_partials(self._partials(y), self.n, self.k)
+
+    def histogram(self, edges):
+        return self._kops.fused_histogram_multi(
+            self.x, edges, backend=self._backend)
 
     def init_stats(self):
         x, b = self.x, self.k.shape[0]
@@ -209,6 +238,7 @@ class ShardedEvaluator:
 
         self.x_local = x_local = x_local.reshape(-1)
         self.axes = axes = (axes,) if isinstance(axes, str) else tuple(axes)
+        self._kops = kops
         self._backend = backend
         self._partials1 = lambda y: kops.fused_partials(
             x_local, y, backend=backend)
@@ -217,6 +247,22 @@ class ShardedEvaluator:
 
     def __call__(self, y: jax.Array) -> FG:
         return self.combine(self._partials1(y))
+
+    def local_histogram(self, edges):
+        """This shard's un-psum'd slot vectors (shape ``(nbins + 2,)``) —
+        the binned analogue of :meth:`local_partials`; the distributed
+        binned loop bounds the PER-SHARD in-bracket count from these."""
+        return self._kops.fused_histogram(
+            self.x_local, edges, backend=self._backend)
+
+    def histogram(self, edges):
+        """Binned pass over the GLOBAL array: local histogram + one psum of
+        the ``(nbins + 2,)`` count vector — additive across shards exactly
+        like the FG quadruple (B = 1 view: ``(nbins + 1,)`` edges).  The
+        per-bin sums are returned un-psum'd as ``None``: the binned engine
+        never reads them, and psumming them would double the wire bytes."""
+        cnt, _bsum = self.local_histogram(edges)
+        return jax.lax.psum(cnt, self.axes), None
 
     def local_partials(self, y: jax.Array):
         """This shard's un-psum'd quadruple (for shard-local bookkeeping —
@@ -245,16 +291,29 @@ class FnEvaluator:
     """Adapter: wrap a raw ``partials(y) -> (sp, sn, lt, le)`` closure (all
     fields ``(B,)``-shaped) as an :class:`Evaluator`.  Used by the
     distributed across-axis solver, where the combine is a per-coordinate
-    psum, and by tests that drive the engine through a custom backend."""
+    psum, and by tests that drive the engine through a custom backend.
 
-    def __init__(self, partials: Callable, n, k, init_stats: Callable):
+    ``histogram(edges) -> (cnt, bsum)`` (edges ``(B, nbins + 1)``, outputs
+    ``(B, nbins + 2)``) is optional; without it the evaluator only drives
+    the FG methods."""
+
+    def __init__(self, partials: Callable, n, k, init_stats: Callable,
+                 histogram: Optional[Callable] = None):
         self._partials = partials
         self.n = n
         self.k = k
         self._init_stats = init_stats
+        self._histogram = histogram
 
     def __call__(self, y: jax.Array) -> FG:
         return fg_from_partials(self._partials(y), self.n, self.k)
+
+    def histogram(self, edges):
+        if self._histogram is None:
+            raise NotImplementedError(
+                "this FnEvaluator was built without a histogram closure; "
+                "method='binned' needs one")
+        return self._histogram(edges)
 
     def init_stats(self):
         return self._init_stats()

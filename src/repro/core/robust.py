@@ -112,7 +112,7 @@ def _lts_weights(r, h):
     return _lts_weights_rows(r[None, :], h)[0]
 
 
-def _lts_weights_rows(R, h):
+def _lts_weights_rows(R, h, method=None):
     """Row-wise fractional trimming weights for (B, n) residual blocks.
 
     One rows-mode batched selection yields every row's cutoff m = |r|^2_(h)
@@ -120,7 +120,7 @@ def _lts_weights_rows(R, h):
     points in total weight.
     """
     a2 = R * R
-    m = selection.select_rows(a2, h).value[:, None]
+    m = selection.select_rows(a2, h, method=method).value[:, None]
     b_lo = jnp.sum(a2 < m, axis=1, keepdims=True, dtype=jnp.int32)
     b_eq = jnp.sum(a2 == m, axis=1, keepdims=True, dtype=jnp.int32)
     a = jnp.asarray(h, jnp.int32) - b_lo
@@ -139,9 +139,11 @@ def _weighted_ls_rows(X, y, W):
     return jax.vmap(lambda w: _weighted_ls(X, y, w))(W)
 
 
-@functools.partial(jax.jit, static_argnames=("n_starts", "c_steps", "h"))
+@functools.partial(jax.jit, static_argnames=("n_starts", "c_steps", "h",
+                                             "method"))
 def lts_fit(key, X, y, *, h: Optional[int] = None, n_starts: int = 64,
-            c_steps: int = 10) -> RobustFit:
+            c_steps: int = 10,
+            method: Optional[str] = None) -> RobustFit:
     """FAST-LTS: elemental starts -> concentration steps -> best fit.
 
     Concentration runs starts-inside, steps-outside: each ``lax.scan`` step
@@ -150,6 +152,10 @@ def lts_fit(key, X, y, *, h: Optional[int] = None, n_starts: int = 64,
     weighted LS.  The objective is monotone non-increasing along C-steps
     (Rousseeuw & Van Driessen), so the final best-of-starts is a
     high-breakdown estimate.
+
+    ``method`` threads through to the batched selections (None = auto:
+    'binned' for large n — every C-step then costs ~3 data passes over the
+    (n_starts, n) residual block instead of ~15).
     """
     n, p = X.shape
     hh = (n + p + 1) // 2 if h is None else h
@@ -158,11 +164,11 @@ def lts_fit(key, X, y, *, h: Optional[int] = None, n_starts: int = 64,
 
     def c_step(thetas, _):
         R = thetas @ X.T - y[None, :]          # (n_starts, n) residuals
-        W = _lts_weights_rows(R, hh)           # one batched selection
+        W = _lts_weights_rows(R, hh, method)   # one batched selection
         return _weighted_ls_rows(X, y, W), None
 
     thetas, _ = jax.lax.scan(c_step, thetas0, None, length=c_steps)
-    objs = lts_objective_rows(thetas @ X.T - y[None, :], hh)
+    objs = lts_objective_rows(thetas @ X.T - y[None, :], hh, method=method)
     best = jnp.argmin(objs)
     theta = thetas[best]
     return RobustFit(
@@ -172,22 +178,24 @@ def lts_fit(key, X, y, *, h: Optional[int] = None, n_starts: int = 64,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("n_starts",))
-def lms_fit(key, X, y, *, n_starts: int = 256) -> RobustFit:
+@functools.partial(jax.jit, static_argnames=("n_starts", "method"))
+def lms_fit(key, X, y, *, n_starts: int = 256,
+            method: Optional[str] = None) -> RobustFit:
     """LMS by best-of-elemental-starts (the classical PROGRESS approach).
 
     Every start's criterion Med(r^2) is one row of a single rows-mode
     batched selection — thousands of concurrent selection problems in one
-    bracket loop, the workload the paper's GPU method targets.
+    bracket loop, the workload the paper's GPU method targets.  ``method``
+    threads through to the selections (None = auto: 'binned' for large n).
     """
     n = X.shape[0]
     thetas = _elemental_thetas(key, X, y, n_starts)
     R2 = (thetas @ X.T - y[None, :]) ** 2      # (n_starts, n)
-    objs = selection.select_rows(R2, (n + 1) // 2).value
+    objs = selection.select_rows(R2, (n + 1) // 2, method=method).value
     best = jnp.argmin(objs)
     theta = thetas[best]
     r2 = residuals(theta, X, y) ** 2
-    med = selection.median(r2).value
+    med = selection.median(r2, method=method).value
     return RobustFit(
         theta=theta, objective=objs[best],
         inlier_weights=(r2 <= med).astype(X.dtype),
@@ -200,7 +208,7 @@ def lms_fit(key, X, y, *, n_starts: int = 256) -> RobustFit:
 
 
 def knn_predict(train_x, train_y, query_x, k: int, *, classify: bool = False,
-                n_classes: int = 0):
+                n_classes: int = 0, method: Optional[str] = None):
     """kNN regression/classification without sorting the distances.
 
     Distances by one MXU-friendly matmul; the k-NN cutoffs for ALL queries
@@ -215,7 +223,7 @@ def knn_predict(train_x, train_y, query_x, k: int, *, classify: bool = False,
         + jnp.sum(train_x**2, -1)[None, :]
     )
 
-    dk = selection.select_rows(d2, k).value[:, None]
+    dk = selection.select_rows(d2, k, method=method).value[:, None]
     lt = (d2 < dk).astype(d2.dtype)
     eq = (d2 == dk).astype(d2.dtype)
     n_lt = jnp.sum(lt, -1, keepdims=True)

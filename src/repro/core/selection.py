@@ -20,6 +20,14 @@ and the hybrid finalize all operate on ``(B,)`` state vectors, fed by an
 
 Methods (shared skeleton, they differ only in the next-pivot proposal):
 
+* ``binned``    — binned bracket descent (default for large n): each data
+  pass histograms the live bracket into ``nbins`` sub-intervals, so one
+  sweep buys log2(nbins) bisection-equivalents of narrowing (Tibshirani's
+  successive-binning, arXiv:0806.3301, generalized to any order statistic
+  and to batched/sharded data).  Phase 1 runs ~2-3 histogram sweeps until
+  every row's in-bracket count is under ``cap``; phase 2 compacts the
+  survivors into the ``(B, cap)`` buffer and finalizes exactly — O(cap)
+  work on O(n) data touched ~3 times instead of ~15.
 * ``cp``        — Kelley's cutting-plane method (Algorithm 1 of the paper).
 * ``bisection`` — classical bisection on the subgradient sign (paper Sec. III).
 * ``golden``    — golden-section-style bracket shrink (paper baseline).
@@ -28,7 +36,11 @@ Methods (shared skeleton, they differ only in the next-pivot proposal):
 
 Each iteration costs exactly one fused pass over the data — the paper's
 ``maxit + O(1)`` parallel reductions — regardless of how many problems ride
-in the batch.
+in the batch; ``binned`` needs ~3 such passes where ``cp`` needs ~15.
+``method=None`` (the default) resolves per backend: ``binned`` for
+``n >= BINNED_MIN_N`` on the Pallas kernel path (where a histogram sweep
+costs the same HBM traffic as an FG pass), ``cp`` otherwise (the CPU jnp
+histogram is scatter-bound — see ``_resolve_method``).
 
 Exactness: unlike the paper (which stops on a float tolerance and then scans
 for the largest ``x_i <= y~``), we carry the counts ``n_lt / n_le`` through
@@ -75,7 +87,41 @@ from repro.core.objective import (
 )
 from repro.core import transforms
 
-METHODS = ("cp", "cp_hybrid", "bisection", "golden", "brent", "sort")
+METHODS = ("binned", "cp", "cp_hybrid", "bisection", "golden", "brent",
+           "sort")
+
+# method=None resolution: histogram sweeps win once the O(n) data pass
+# dominates (~3 sweeps vs ~15 CP passes); below this the per-sweep bin
+# bookkeeping isn't worth it and Kelley cuts converge in microseconds.
+BINNED_MIN_N = 1 << 16
+
+# Sub-intervals per histogram sweep (one sweep = log2(128) = 7
+# bisection-equivalents of bracket narrowing); the kernels take the bin
+# count from the edge array the engine builds with this default.
+DEF_NBINS = 128
+
+
+def _resolve_method(method: Optional[str], n: int,
+                    backend: Optional[str] = None) -> str:
+    """``None``/``'auto'`` -> 'binned' on the kernel path for large n.
+
+    The binned descent is a bandwidth trade: each sweep touches the data
+    once (like a fused FG pass) but buys log2(nbins) bisection steps, so it
+    wins wherever the pass cost is HBM-bound — the Pallas kernel path.  On
+    the CPU jnp fallback a histogram sweep is scatter/searchsorted-bound
+    (~25x a fused pass at 1M elements, see BENCH_selection.json), so auto
+    keeps 'cp' there; callers can still force ``method='binned'`` (exact on
+    every backend, and the pass-count telemetry is what the perf trajectory
+    tracks).
+    """
+    if method in (None, "auto"):
+        from repro.kernels.ops import _on_tpu  # deferred: core <-> kernels
+
+        kernel_path = backend == "pallas" or (backend is None and _on_tpu())
+        return "binned" if (kernel_path and n >= BINNED_MIN_N) else "cp"
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}; one of {METHODS}")
+    return method
 
 # Status codes for SelectResult.status
 EXACT_HIT = 0       # pivot certified equal to x_(k) during iterations
@@ -158,25 +204,15 @@ def _live(s: BatchState, cap):
     return (~s.found_exact) & (s.cleR - s.cleL > cap) & (s.yR > s.yL)
 
 
-def bracket_loop_batched(
-    ev: Evaluator,
-    *,
-    method: str = "cp",
-    maxit: int = 64,
-    cap=0,
-    found0: Optional[jax.Array] = None,
-    t0: Optional[jax.Array] = None,
-):
-    """Run the batched bracket-shrinking loop against an evaluator.
+def _seed_state(ev: Evaluator, found0, t0):
+    """Shared loop seed: analytic bracket/cut init from one stats pass.
 
-    ``ev`` owns the data; this loop only sees ``(B,)`` vectors.  ``cap`` is
-    the per-row stopping count (0 = iterate to exact hit / maxit, the
-    distributed across-axis regime).  ``found0``/``t0`` pre-seed rows whose
-    answer is already certified (e.g. extreme ranks) so they never go live.
-
-    Returns ``(final BatchState, xmin, xmax)`` with per-row extremes.
+    Returns ``(s0, xmin, xmax, kk, dtype)``; used by both the cutting-plane
+    loop and the binned histogram loop (the f/g fields are only meaningful
+    to the former).  The slopes use the conservative tie count 1, which
+    keeps the support lines *lower* bounds (valid cuts) even with
+    duplicated extremes.
     """
-    propose = _PROPOSALS[method]
     xmin, xmax, xmean = ev.init_stats()
     k = ev.k
     shape = jnp.broadcast_shapes(jnp.shape(xmin), jnp.shape(k))
@@ -186,9 +222,7 @@ def bracket_loop_batched(
     alpha, beta = os_weights(nf, kk, dtype)
     bc = lambda v: jnp.broadcast_to(jnp.asarray(v, dtype), shape)
 
-    # Analytic init at the extremes (paper: single fused reduction).  The
-    # slopes use the conservative tie count 1, which keeps the support lines
-    # *lower* bounds (valid cuts) even with duplicated extremes.
+    # Analytic init at the extremes (paper: single fused reduction).
     xmin, xmax, xmean = bc(xmin), bc(xmax), bc(xmean)
     fL0 = beta * (xmean - xmin)
     fR0 = alpha * (xmax - xmean)
@@ -210,6 +244,29 @@ def bracket_loop_batched(
         it=jnp.asarray(0, jnp.int32),
         tp=0.5 * (xmin + xmax), fp=jnp.maximum(fL0, fR0),
     )
+    return s0, xmin, xmax, kk, dtype
+
+
+def bracket_loop_batched(
+    ev: Evaluator,
+    *,
+    method: str = "cp",
+    maxit: int = 64,
+    cap=0,
+    found0: Optional[jax.Array] = None,
+    t0: Optional[jax.Array] = None,
+):
+    """Run the batched bracket-shrinking loop against an evaluator.
+
+    ``ev`` owns the data; this loop only sees ``(B,)`` vectors.  ``cap`` is
+    the per-row stopping count (0 = iterate to exact hit / maxit, the
+    distributed across-axis regime).  ``found0``/``t0`` pre-seed rows whose
+    answer is already certified (e.g. extreme ranks) so they never go live.
+
+    Returns ``(final BatchState, xmin, xmax)`` with per-row extremes.
+    """
+    propose = _PROPOSALS[method]
+    s0, xmin, xmax, kk, dtype = _seed_state(ev, found0, t0)
 
     def cond(s: BatchState):
         return (s.it < maxit) & jnp.any(_live(s, cap))
@@ -245,36 +302,176 @@ def bracket_loop_batched(
     return jax.lax.while_loop(cond, body, s0), xmin, xmax
 
 
-def _finalize_rows(x, ks, s: BatchState, cap, xmin, xmax) -> SelectResult:
-    """Exact per-row recovery from the final brackets.  Two fused passes.
+def binned_descent_step(cum, edges, yL, yR, kk):
+    """One binned-descent narrowing decision from prefix counts.
 
-    Pass 1 (the paper's ``copy_if`` + count, row-wise): compact each row's
-    open pivot interval into a fixed ``(B, cap)`` buffer (slot ``cap`` is the
-    overflow trash slot), count ``c_L = count(x<=y_L)`` and find the next
-    distinct value above ``y_L``; one batched sort of the (B, cap) buffer.
-    Pass 2 (tie fallback verification): ``count(x <= vnext)`` per row.
+    ``cum[..., j] = count(x <= e_j)`` at the realized ``edges``
+    ``(..., nbins+1)`` of the bracket ``[yL, yR]`` (leading dims = batch,
+    possibly none); ``edges`` MUST be the same array the histogram pass
+    binned against — it is computed once per sweep and shared, never
+    recomputed (XLA FMA contraction makes recomputed edge arithmetic
+    fusion-context-dependent).  Returns
+    ``(yLn, yRn, cLn, cRn, jm1, jstar, hit_lo, exact, stall)``:
+
+    * ``jstar`` — first edge whose prefix count reaches ``kk``; the answer
+      lies in the single bin ``(e_{jstar-1}, e_jstar]``;
+    * ``hit_lo`` — ``jstar == 0``, i.e. ``count(x <= yL) >= k``: possible
+      only while ``yL`` is the initial minimum (afterwards the invariant
+      ``count(x <= yL) < k`` forbids it), and certifies ``x_(k) == yL``;
+    * ``exact`` — ``hit_lo`` or ulp-collapse: ``(yLn, yRn]`` holds a single
+      representable value, so the invariant certifies ``x_(k) == yRn``;
+    * ``stall`` — the chosen bin IS the whole bracket (bin width underflowed
+      against denormal-scale data), or the prefix counts are inconsistent
+      with the bracket invariant (``cum[-1] < k`` — NaN data, a kernel
+      miscount): no trustworthy progress is possible, the caller should
+      freeze this problem and let its finalize fallback resolve it.
+
+    This is the exactness-critical core of the binned method, shared by the
+    batched loop below and the distributed loop in ``core.distributed`` —
+    keep it the single implementation.
     """
-    b, n = x.shape
-    kk = jnp.broadcast_to(jnp.asarray(ks, jnp.int32), (b,))
-    yL = s.yL[:, None]
-    yR = s.yR[:, None]
+    reached = cum >= kk[..., None]
+    jstar = jnp.argmax(reached, axis=-1).astype(jnp.int32)
+    jm1 = jnp.maximum(jstar - 1, 0)
+    take = lambda a, i: jnp.take_along_axis(a, i[..., None], axis=-1)[..., 0]
+    yLn, yRn = take(edges, jm1), take(edges, jstar)
+    cLn, cRn = take(cum, jm1), take(cum, jstar)
+    # count-invariant sanity: count(x <= yR) >= k must hold; if it doesn't,
+    # argmax over all-False returned 0 and NOTHING below may certify — a
+    # violated invariant must fail safe (stall), never mint EXACT_HIT.
+    ok = reached[..., -1]
+    hit_lo = (jstar == 0) & reached[..., 0]
+    collapse = transforms.next_float(yLn) >= yRn
+    exact = (hit_lo | collapse) & ok
+    stall = ~exact & (~ok | ((yLn == yL) & (yRn == yR)))
+    return yLn, yRn, cLn, cRn, jm1, jstar, hit_lo, exact, stall
 
-    mask_in = (x > yL) & (x <= yR)
-    cL = jnp.sum(x <= yL, axis=1, dtype=jnp.int32)
-    n_in = jnp.sum(mask_in, axis=1, dtype=jnp.int32)
-    # fixed-capacity row-wise compaction
-    pos = jnp.cumsum(mask_in.astype(jnp.int32), axis=1) - 1
-    idx = jnp.where(mask_in, jnp.minimum(pos, cap), cap)
+
+def binned_loop_batched(
+    ev: Evaluator,
+    *,
+    nbins: int = DEF_NBINS,
+    maxit: int = 16,
+    cap=0,
+    found0: Optional[jax.Array] = None,
+    t0: Optional[jax.Array] = None,
+):
+    """Phase 1 of the binned two-phase schedule: histogram bracket descent.
+
+    Each sweep builds the bracket's realized edges once
+    (``kernels.ref.bin_edges``), calls ``ev.histogram(edges)`` — ONE fused
+    data pass — and narrows every live row's bracket to the single
+    sub-interval
+    ``(e_{j-1}, e_j]`` whose prefix count straddles that row's rank
+    (``count(x <= e_{j-1}) < k <= count(x <= e_j)``), a factor-``nbins``
+    shrink per pass where the cutting-plane loop gets one pivot.  Rows stop
+    independently once their in-bracket count is under ``cap`` (phase 2,
+    the survivor compaction + exact finalize, takes over), on the exact
+    certificates below, or at ``maxit``.
+
+    Exactness bookkeeping mirrors the cutting-plane loop: brackets only move
+    to REALIZED fp edge values whose prefix counts were measured, so the row
+    invariant ``count(x <= yL) < k <= count(x <= yR)`` holds exactly at
+    every step and transfers to the finalize (and across the log1p
+    roundtrip).  Two in-loop certificates short-circuit a row: a first-sweep
+    ``count(x <= xmin) >= k`` pins ``x_(k) = xmin``, and a bracket collapsed
+    to one representable value ``(yL, nextafter(yL)]`` pins ``x_(k) = yR``.
+
+    Returns ``(BatchState, xmin, xmax)`` like :func:`bracket_loop_batched`;
+    the f/g cut fields keep their analytic seeds (the binned proposal never
+    reads them), and ``iters`` counts histogram sweeps.
+    """
+    from repro.kernels.ref import bin_edges  # deferred: core <-> kernels
+
+    s0, xmin, xmax, kk, dtype = _seed_state(ev, found0, t0)
+    # Brackets narrow to realized fp edge values and the finalize recounts
+    # against exactly those values, so the loop state must not round edges
+    # through a storage dtype below the kernels' f32 accumulation (bf16
+    # data would otherwise round yL up and break the count invariant).
+    dt = jnp.promote_types(dtype, jnp.float32)
+    s0 = s0._replace(yL=s0.yL.astype(dt), yR=s0.yR.astype(dt),
+                     t_exact=s0.t_exact.astype(dt))
+    stalled0 = jnp.zeros(s0.found_exact.shape, bool)
+
+    def live(s, stalled):
+        return _live(s, cap) & ~stalled
+
+    def cond(carry):
+        s, stalled = carry
+        return (s.it < maxit) & jnp.any(live(s, stalled))
+
+    def body(carry):
+        s, stalled = carry
+        lv = live(s, stalled)
+        # the realized edges are computed ONCE here and shared by the data
+        # pass and the narrowing decision (the exactness contract)
+        edges = bin_edges(s.yL, s.yR, nbins)
+        cnt, _sums = ev.histogram(edges)
+        # prefix counts at the realized edges: cum[..., j] = count(x <= e_j)
+        cum = jnp.cumsum(cnt[..., :-1], axis=-1)
+        yLn, yRn, cLn, cRn, _, _, hit_lo, exact, stall = \
+            binned_descent_step(cum, edges, s.yL, s.yR, kk)
+        exact = lv & exact
+        t_ex = jnp.where(hit_lo, s.yL, yRn)
+        # stalled rows freeze; the finalize's fallback chain resolves them
+        # from the current bracket instead of burning sweeps to maxit
+        stall_n = lv & stall
+        upd = lv & ~exact & ~stall_n
+        s = s._replace(
+            yL=jnp.where(upd, yLn, s.yL),
+            yR=jnp.where(upd, yRn, s.yR),
+            cleL=jnp.where(upd, cLn, s.cleL),
+            cleR=jnp.where(upd, cRn, s.cleR),
+            t_exact=jnp.where(exact, t_ex, s.t_exact),
+            found_exact=s.found_exact | exact,
+            iters=s.iters + lv.astype(jnp.int32),
+            it=s.it + 1,
+        )
+        return s, stalled | stall_n
+
+    s, _ = jax.lax.while_loop(cond, body, (s0, stalled0))
+    return s, xmin, xmax
+
+
+def _run_bracket_phase(ev, method, maxit, cap, nbins):
+    """Dispatch the phase-1 loop for a resolved method."""
+    if method == "binned":
+        return binned_loop_batched(ev, nbins=nbins, maxit=maxit, cap=cap)
+    return bracket_loop_batched(ev, method=method, maxit=maxit, cap=cap)
+
+
+def _compact_interval(x, yL, yR, cap):
+    """ONE problem's phase-2 survivor compaction + fallback probes (1-D x).
+
+    The paper's ``copy_if`` as a static-shape gather: the open pivot
+    interval ``(yL, yR]`` lands in a ``(cap,)`` buffer (slot ``cap`` is the
+    overflow trash slot), alongside the count certificates the answer
+    assembly needs — ``c_L = count(x <= yL)``, the in-bracket count, the
+    next distinct value above ``yL`` and its inclusive count (tie fallback
+    verification).  Everything downstream is O(cap), not O(n).
+    """
     big = jnp.asarray(jnp.inf, x.dtype)
-    rows = jnp.arange(b, dtype=jnp.int32)[:, None]
-    z = jnp.full((b, cap + 1), big, x.dtype).at[rows, idx].set(
+    mask_in = (x > yL) & (x <= yR)
+    cL = jnp.sum(x <= yL, dtype=jnp.int32)
+    n_in = jnp.sum(mask_in, dtype=jnp.int32)
+    pos = jnp.cumsum(mask_in.astype(jnp.int32)) - 1
+    idx = jnp.where(mask_in, jnp.minimum(pos, cap), cap)
+    z = jnp.full((cap + 1,), big, x.dtype).at[idx].set(
         jnp.where(mask_in, x, big))
-    zs = jnp.sort(z[:, :cap], axis=1)
-    sort_idx = jnp.clip(kk - cL - 1, 0, cap - 1)
-    ans_sort = jnp.take_along_axis(zs, sort_idx[:, None], axis=1)[:, 0]
+    vnext = jnp.min(jnp.where(x > yL, x, big))
+    n_le_v = jnp.sum(x <= vnext, dtype=jnp.int32)
+    return z[:cap], cL, n_in, vnext, n_le_v
 
-    vnext = jnp.min(jnp.where(x > yL, x, big), axis=1)
-    n_le_v = jnp.sum(x <= vnext[:, None], axis=1, dtype=jnp.int32)
+
+def _assemble_answers(kk, s: BatchState, cap, zs, cL, n_in, vnext, n_le_v,
+                      n_lt_max, xmin, xmax) -> SelectResult:
+    """Per-problem answer/status cascade from compacted buffers + counts.
+
+    Shared by the rows-mode and shared-x finalizes — all inputs are
+    batch-shaped except the sorted ``(B, cap)`` buffer ``zs``.
+    """
+    sort_idx = jnp.clip(kk - cL - 1, 0, cap - 1)
+    ans_sort = jnp.take_along_axis(zs, sort_idx[..., None], axis=-1)[..., 0]
     fallback_ok = (cL < kk) & (kk <= n_le_v)
 
     value = jnp.where(
@@ -297,7 +494,6 @@ def _finalize_rows(x, ks, s: BatchState, cap, xmin, xmax) -> SelectResult:
     # answer is at or below y_L, which can only be x_(1)=min (y_L starts at
     # the min and only moves to points certified count(x<=t) < k).  Symmetric
     # test at the max.  Also covers k==1, k==n and all-equal rows.
-    n_lt_max = jnp.sum(x < xmax[:, None], axis=1, dtype=jnp.int32)
     at_min = cL >= kk
     at_max = n_lt_max < kk
     value = jnp.where(at_min, xmin, jnp.where(at_max, xmax, value))
@@ -306,6 +502,47 @@ def _finalize_rows(x, ks, s: BatchState, cap, xmin, xmax) -> SelectResult:
         value=value, iters=s.iters, status=status.astype(jnp.int32),
         y_lo=s.yL, y_hi=s.yR, n_in=n_in,
     )
+
+
+def _finalize_rows(x, ks, s: BatchState, cap, xmin, xmax) -> SelectResult:
+    """Exact per-row recovery from the final brackets.  Two fused passes.
+
+    Pass 1 (the paper's ``copy_if`` + count, row-wise): compact each row's
+    open pivot interval into a fixed ``(B, cap)`` buffer, count
+    ``c_L = count(x<=y_L)`` and find the next distinct value above ``y_L``;
+    one batched sort of the (B, cap) buffer.
+    Pass 2 (tie fallback verification): ``count(x <= vnext)`` per row.
+    """
+    b, n = x.shape
+    kk = jnp.broadcast_to(jnp.asarray(ks, jnp.int32), (b,))
+    z, cL, n_in, vnext, n_le_v = jax.vmap(
+        lambda xi, lo, hi: _compact_interval(xi, lo, hi, cap)
+    )(x, s.yL, s.yR)
+    zs = jnp.sort(z, axis=-1)
+    n_lt_max = jnp.sum(x < xmax[:, None], axis=1, dtype=jnp.int32)
+    return _assemble_answers(kk, s, cap, zs, cL, n_in, vnext, n_le_v,
+                             n_lt_max, xmin, xmax)
+
+
+def _finalize_shared(x, ks, s: BatchState, cap, xmin, xmax) -> SelectResult:
+    """Shared-x exact finalize on per-pivot compacted buffers.
+
+    The compaction runs per pivot against the ONE ``(n,)`` array
+    (sequential ``lax.map`` over the K brackets), so peak memory stays
+    O(n + K*cap) — the hot iterations (multi-bracket kernel) and the
+    finalize now both avoid materializing ``(K, n)``.
+    """
+    x = x.reshape(-1)
+    kk = jnp.asarray(ks, jnp.int32).reshape(-1)
+    z, cL, n_in, vnext, n_le_v = jax.lax.map(
+        lambda args: _compact_interval(x, args[0], args[1], cap),
+        (s.yL, s.yR))
+    zs = jnp.sort(z, axis=-1)
+    # one shared pass: xmin/xmax are (K,) broadcasts of the global extremes
+    n_lt_max = jnp.broadcast_to(
+        jnp.sum(x < jnp.max(xmax), dtype=jnp.int32), kk.shape)
+    return _assemble_answers(kk, s, cap, zs, cL, n_in, vnext, n_le_v,
+                             n_lt_max, xmin, xmax)
 
 
 def _default_cap(n: int) -> int:
@@ -349,33 +586,66 @@ def _map_bracket_back_rows(x, xt, s: BatchState) -> BatchState:
     )
 
 
+def _map_bracket_back_shared(x, xt, s: BatchState) -> BatchState:
+    """Shared-x analogue of :func:`_map_bracket_back_rows`: one ``(n,)``
+    array, (K,) transformed brackets, mapped back by the same
+    count-preserving preimage reductions — per pivot via ``lax.map`` so the
+    ``(K, n)`` broadcast never materializes."""
+    neg = jnp.asarray(-jnp.inf, x.dtype)
+    x = x.reshape(-1)
+    xt = xt.reshape(-1)
+
+    def one(args):
+        yL_t, yR_t, t_ex, found = args
+        lo_t = jnp.where(found, t_ex, yL_t)
+        hi_t = jnp.where(found, t_ex, yR_t)
+        yL = jnp.where(
+            found,
+            jnp.max(jnp.where(xt < lo_t, x, neg)),  # strict: preimage
+            jnp.max(jnp.where(xt <= lo_t, x, neg)),
+        )
+        yR = jnp.max(jnp.where(xt <= hi_t, x, neg))
+        return yL, yR
+
+    yL, yR = jax.lax.map(one, (s.yL, s.yR, s.t_exact, s.found_exact))
+    return s._replace(
+        yL=yL, yR=yR,
+        # exactness certificates do not survive the fp roundtrip:
+        found_exact=jnp.zeros_like(s.found_exact),
+    )
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("method", "maxit", "cap", "transform", "backend"),
+    static_argnames=("method", "maxit", "cap", "transform", "backend",
+                     "nbins"),
 )
 def select_rows(
     x: jax.Array,
     k,
     *,
-    method: str = "cp",
+    method: Optional[str] = None,
     maxit: int = 64,
     cap: Optional[int] = None,
     transform: Optional[str] = None,
     backend: Optional[str] = None,
+    nbins: int = DEF_NBINS,
 ) -> SelectResult:
     """Rows-mode batched selection: ``x`` is (B, n), ``k`` scalar or (B,).
 
     Every field of the returned :class:`SelectResult` is (B,)-shaped; row
     ``i`` solves the independent problem ``x[i], k[i]`` with the same
     exactness guarantees as the scalar solver (which is the B=1 view of this
-    function).  ``backend`` selects the fused data pass
-    ('jnp' | 'pallas' | 'pallas_interpret', default: pallas on TPU).
+    function).  ``method=None`` resolves to 'binned' for n >= BINNED_MIN_N
+    on the Pallas kernel path and 'cp' otherwise (see ``_resolve_method``);
+    ``nbins`` sizes the binned histogram sweeps.  ``backend`` selects the
+    fused data pass ('jnp' | 'pallas' | 'pallas_interpret', default: pallas
+    on TPU).
     """
-    if method not in METHODS:
-        raise ValueError(f"unknown method {method!r}; one of {METHODS}")
     if x.ndim != 2:
         raise ValueError(f"select_rows wants (B, n) data, got {x.shape}")
     b, n = x.shape
+    method = _resolve_method(method, n, backend)
     if cap is None:
         cap = _default_cap_rows(n)
     cap = min(cap, n)
@@ -394,9 +664,9 @@ def select_rows(
 
     if transform == "log1p":
         xt = transforms.log1p_transform_rows(x)
-        s, _, _ = bracket_loop_batched(
-            RowsEvaluator(xt, ks, backend=backend),
-            method=method, maxit=maxit, cap=cap)
+        s, _, _ = _run_bracket_phase(
+            RowsEvaluator(xt, ks, backend=backend), method, maxit, cap,
+            nbins)
         s = _map_bracket_back_rows(x, xt, s)
         return _finalize_rows(x, ks, s, cap,
                               jnp.min(x, axis=1), jnp.max(x, axis=1))
@@ -404,8 +674,7 @@ def select_rows(
         raise ValueError(f"unknown transform {transform!r}")
 
     ev = RowsEvaluator(x, ks, backend=backend)
-    s, xmin, xmax = bracket_loop_batched(ev, method=method, maxit=maxit,
-                                         cap=cap)
+    s, xmin, xmax = _run_bracket_phase(ev, method, maxit, cap, nbins)
     return _finalize_rows(x, ks, s, cap, xmin, xmax)
 
 
@@ -413,19 +682,22 @@ def order_statistic(
     x: jax.Array,
     k,
     *,
-    method: str = "cp",
+    method: Optional[str] = None,
     maxit: int = 64,
     cap: Optional[int] = None,
     transform: Optional[str] = None,
     backend: Optional[str] = None,
+    nbins: int = DEF_NBINS,
 ) -> SelectResult:
     """k-th smallest element of ``x`` (k is 1-indexed, may be traced).
 
-    The ``B = 1`` view of :func:`select_rows`.  ``method`` in {"cp",
-    "cp_hybrid", "bisection", "golden", "brent", "sort"}.  ``cp`` and
-    ``cp_hybrid`` are aliases (the hybrid finalize is always on — it is what
-    makes the result exact).  ``transform='log1p'`` applies the paper's
-    monotone guard for extreme-valued data (Sec. V-D).
+    The ``B = 1`` view of :func:`select_rows`.  ``method`` in {"binned",
+    "cp", "cp_hybrid", "bisection", "golden", "brent", "sort"}; ``None``
+    resolves to 'binned' for large n on the Pallas kernel path, 'cp'
+    otherwise (see ``_resolve_method``).
+    ``cp`` and ``cp_hybrid`` are aliases (the hybrid finalize is always on —
+    it is what makes the result exact).  ``transform='log1p'`` applies the
+    paper's monotone guard for extreme-valued data (Sec. V-D).
     """
     x = x.reshape(-1)
     if cap is None:
@@ -433,7 +705,7 @@ def order_statistic(
     res = select_rows(
         x[None, :], jnp.asarray(k, jnp.int32).reshape(1),
         method=method, maxit=maxit, cap=cap, transform=transform,
-        backend=backend,
+        backend=backend, nbins=nbins,
     )
     return jax.tree.map(lambda a: a[0], res)
 
@@ -459,17 +731,19 @@ def topk_threshold(x: jax.Array, m, **kw) -> SelectResult:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("method", "maxit", "cap", "transform", "backend"),
+    static_argnames=("method", "maxit", "cap", "transform", "backend",
+                     "nbins"),
 )
 def multi_order_statistic(
     x: jax.Array,
     ks,
     *,
-    method: str = "cp",
+    method: Optional[str] = None,
     maxit: int = 64,
     cap: Optional[int] = None,
     transform: Optional[str] = None,
     backend: Optional[str] = None,
+    nbins: int = DEF_NBINS,
 ) -> SelectResult:
     """Several order statistics of the SAME array at once (shared-x mode).
 
@@ -477,13 +751,13 @@ def multi_order_statistic(
     each iteration reads ``x`` ONCE and evaluates every live pivot from the
     resident tile (on TPU: one VMEM load per tile for all K pivots) — the
     cheap way to get (p25, p50, p75, p99, ...) telemetry sets.  The finalize
-    broadcasts ``x`` across the K rows for the O(1) compaction passes only;
-    the ``maxit`` hot iterations never duplicate the data.
+    compacts survivors per pivot straight from the ``(n,)`` array
+    (:func:`_finalize_shared`), so neither the hot iterations nor the
+    finalize ever materialize ``(K, n)``.
     """
-    if method not in METHODS:
-        raise ValueError(f"unknown method {method!r}; one of {METHODS}")
     x = x.reshape(-1)
     n = x.size
+    method = _resolve_method(method, n, backend)
     ks = jnp.clip(jnp.asarray(ks, jnp.int32).reshape(-1), 1, n)
     nk = ks.shape[0]
     if cap is None:
@@ -503,23 +777,19 @@ def multi_order_statistic(
 
     if transform == "log1p":
         xt, _ = transforms.log1p_transform(x)
-        s, _, _ = bracket_loop_batched(
-            SharedEvaluator(xt, ks, backend=backend),
-            method=method, maxit=maxit, cap=cap)
-        xb = jnp.broadcast_to(x[None, :], (nk, n))
-        s = _map_bracket_back_rows(xb, jnp.broadcast_to(xt[None, :],
-                                                        (nk, n)), s)
+        s, _, _ = _run_bracket_phase(
+            SharedEvaluator(xt, ks, backend=backend), method, maxit, cap,
+            nbins)
+        s = _map_bracket_back_shared(x, xt, s)
         bcast = lambda v: jnp.broadcast_to(v, (nk,))
-        return _finalize_rows(xb, ks, s, cap,
-                              bcast(jnp.min(x)), bcast(jnp.max(x)))
+        return _finalize_shared(x, ks, s, cap,
+                                bcast(jnp.min(x)), bcast(jnp.max(x)))
     elif transform is not None:
         raise ValueError(f"unknown transform {transform!r}")
 
     ev = SharedEvaluator(x, ks, backend=backend)
-    s, xmin, xmax = bracket_loop_batched(ev, method=method, maxit=maxit,
-                                         cap=cap)
-    xb = jnp.broadcast_to(x[None, :], (nk, n))
-    return _finalize_rows(xb, ks, s, cap, xmin, xmax)
+    s, xmin, xmax = _run_bracket_phase(ev, method, maxit, cap, nbins)
+    return _finalize_shared(x, ks, s, cap, xmin, xmax)
 
 
 def quantiles(x: jax.Array, qs, **kw) -> SelectResult:

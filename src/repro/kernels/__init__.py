@@ -1,4 +1,7 @@
-"""Pallas TPU kernels for the paper's compute hot-spot (the fused
-selection-objective transform-reduce), with jit'd dispatch wrappers and
-pure-jnp oracles.  Validated in interpret mode on CPU; see tests/test_kernels.py."""
+"""Pallas TPU kernels for the paper's compute hot-spots: the fused
+selection-objective transform-reduce (scalar / rows / multi-pivot) and the
+binned bracket-descent histogram pass (scalar / rows / multi-bracket), with
+jit'd dispatch wrappers (f64 reroutes to the dtype-preserving oracles) and
+pure-jnp oracles.  Validated in interpret mode on CPU; see
+tests/test_kernels.py."""
 from repro.kernels import cp_objective, ops, ref

@@ -35,15 +35,45 @@ from jax.experimental import pallas as pl
 LANES = 128
 DEF_BLOCK_ROWS = 512
 
+# The histogram kernels build a (block_rows, LANES, nbins + 2) one-hot
+# intermediate per tile (nbins comes from the caller's edge array; the
+# engine default lives in core.selection.DEF_NBINS); 64 rows keeps that
+# under ~4 MiB f32 in VMEM at the default 128 bins.
+DEF_HIST_BLOCK_ROWS = 64
+
+
+def _pad_to_tiles(x: jax.Array, block_rows: int):
+    """Shared prologue of every kernel wrapper: pad the trailing dim of
+    ``x`` to a whole number of ``(block_rows, LANES)`` tiles and expose the
+    tile grid as the two trailing axes.
+
+    Returns ``(x_tiled, nblocks)`` where ``x_tiled`` has shape
+    ``(*leading, nblocks * block_rows, LANES)``.  The padded tail is masked
+    inside the kernels via the global element index, so any ``n`` is
+    supported without host-side padding corrections.
+    """
+    n = x.shape[-1]
+    block = block_rows * LANES
+    nblocks = max(1, -(-n // block))
+    padded = nblocks * block
+    if padded != n:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, padded - n)]
+        x = jnp.pad(x, pad)
+    return x.reshape(x.shape[:-1] + (nblocks * block_rows, LANES)), nblocks
+
+
+def _valid_mask(b, shape, n, block_rows):
+    """Tail mask for tile ``b`` of the grid: global element index < n."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    return (b * block_rows + rows) * LANES + cols < n
+
 
 def _partials_kernel(y_ref, x_ref, fsum_ref, cnt_ref, *, n, block_rows):
     b = pl.program_id(0)
     y = y_ref[0]
     x = x_ref[...].astype(jnp.float32)  # (block_rows, LANES)
-    rows = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
-    cols = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
-    pos = (b * block_rows + rows) * LANES + cols
-    valid = pos < n
+    valid = _valid_mask(b, x.shape, n, block_rows)
 
     d = x - y
     zero = jnp.zeros_like(x)
@@ -74,14 +104,7 @@ def cp_partials(
     count terms to the pure-jnp oracle ``kernels.ref.cp_partials_ref``.
     """
     n = x.size
-    x = x.reshape(-1)
-    block = block_rows * LANES
-    nblocks = max(1, -(-n // block))
-    padded = nblocks * block
-    if padded != n:
-        # padded tail is masked inside the kernel via the global index
-        x = jnp.pad(x, (0, padded - n))
-    x2 = x.reshape(nblocks * block_rows, LANES)
+    x2, nblocks = _pad_to_tiles(x.reshape(-1), block_rows)
     y = jnp.asarray(y, jnp.float32).reshape(1)
 
     fsum, cnt = pl.pallas_call(
@@ -111,10 +134,7 @@ def _batched_kernel(y_ref, x_ref, fsum_ref, cnt_ref, *, n, block_rows):
     b = pl.program_id(1)  # block within the row
     y = y_ref[r]
     x = x_ref[0].astype(jnp.float32)  # (block_rows, LANES)
-    rows = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
-    cols = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
-    pos = (b * block_rows + rows) * LANES + cols
-    valid = pos < n
+    valid = _valid_mask(b, x.shape, n, block_rows)
 
     d = x - y
     zero = jnp.zeros_like(x)
@@ -135,10 +155,7 @@ def _multi_kernel(y_ref, x_ref, fsum_ref, cnt_ref, *, n, npiv, block_rows):
     """
     b = pl.program_id(0)
     x = x_ref[...].astype(jnp.float32)  # (block_rows, LANES)
-    rows = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
-    cols = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
-    pos = (b * block_rows + rows) * LANES + cols
-    valid = pos < n
+    valid = _valid_mask(b, x.shape, n, block_rows)
 
     zero = jnp.zeros_like(x)
     for j in range(npiv):  # static unroll: npiv is a trace-time constant
@@ -168,14 +185,7 @@ def cp_partials_multi(
     """
     n = x.size
     npiv = y.shape[0]
-    x = x.reshape(-1)
-    block = block_rows * LANES
-    nblocks = max(1, -(-n // block))
-    padded = nblocks * block
-    if padded != n:
-        # padded tail is masked inside the kernel via the global index
-        x = jnp.pad(x, (0, padded - n))
-    x2 = x.reshape(nblocks * block_rows, LANES)
+    x2, nblocks = _pad_to_tiles(x.reshape(-1), block_rows)
     y = jnp.asarray(y, jnp.float32).reshape(npiv)
 
     fsum, cnt = pl.pallas_call(
@@ -216,12 +226,7 @@ def cp_partials_batched(
     Returns four (B,) vectors.
     """
     bsz, n = x.shape
-    block = block_rows * LANES
-    nblocks = max(1, -(-n // block))
-    padded = nblocks * block
-    if padded != n:
-        x = jnp.pad(x, ((0, 0), (0, padded - n)))
-    x3 = x.reshape(bsz, nblocks * block_rows, LANES)
+    x3, nblocks = _pad_to_tiles(x, block_rows)
     y = jnp.asarray(y, jnp.float32).reshape(bsz)
 
     fsum, cnt = pl.pallas_call(
@@ -244,3 +249,216 @@ def cp_partials_batched(
     sums = jnp.sum(fsum, axis=1)
     cnts = jnp.sum(cnt, axis=1)
     return sums[..., 0], sums[..., 1], cnts[..., 0], cnts[..., 1]
+
+
+# ---------------------------------------------------------------------------
+# Binned bracket descent: multi-bin histogram kernels
+# ---------------------------------------------------------------------------
+#
+# One sweep bins x against the current bracket's NBINS sub-intervals and
+# emits additive (count, sum) partials per slot — the count vector
+# localizes x_(k) to ONE bin (log2(NBINS) bisection steps of information
+# per data pass) and the per-bin sums are the CP support-line ingredients
+# (sum_pos/sum_neg at every edge by prefix sums), all for the HBM cost of a
+# single fused pass.  Both outputs are additive over blocks/shards, so they
+# psum across a mesh exactly like the FG quadruple.
+#
+# Slot layout (nbins + 2 slots for edges e_0 <= ... <= e_nbins):
+#   slot 0          x <= e_0
+#   slot j          e_{j-1} < x <= e_j          (j = 1..nbins)
+#   slot nbins+1    x > e_nbins
+# so prefix sums over slots 0..j give exact count(x <= e_j) / sum(x <= e_j)
+# at every edge, and sum(cnt) == n is the per-row count invariant.
+#
+# EXACTNESS CONTRACT: the kernels take the REALIZED edge values — computed
+# ONCE by the engine via ``kernels.ref.bin_edges`` — and only COMPARE
+# against them.  Recomputing edges here from (lo, hi) would be unsound:
+# XLA may contract ``lo + w*j`` into an FMA in one fusion context and not
+# another, yielding different fp edges (observed at full-f32-range
+# brackets); comparisons against one shared array cannot diverge, so the
+# histogram counts are exactly consistent with the engine's later
+# ``x <= e_j`` narrowing and finalize comparisons.
+
+
+def _slot_bounds(edges):
+    """``(..., nbins+1)`` edges -> ``(..., nbins+2)`` (lower, upper) slot
+    bounds.  Pure concatenation — NO fp arithmetic (see the exactness
+    contract above)."""
+    ninf = jnp.full_like(edges[..., :1], -jnp.inf)
+    pinf = jnp.full_like(edges[..., :1], jnp.inf)
+    return (jnp.concatenate([ninf, edges], axis=-1),
+            jnp.concatenate([edges, pinf], axis=-1))
+
+
+def _bin_tile(x, valid, lower, upper):
+    """Per-tile slot (count, sum) partials for one bracket.
+
+    ``x``/``valid`` are ``(block_rows, LANES)``; ``lower``/``upper`` the
+    ``(nbins + 2,)`` slot bounds.  Returns ``(cnt, bsum)`` of shape
+    ``(nbins + 2,)``.  The one-hot intermediate is
+    ``(block_rows, LANES, nbins + 2)`` — callers bound ``block_rows``
+    accordingly (DEF_HIST_BLOCK_ROWS).
+    """
+    nslots = lower.shape[-1]
+    j = jax.lax.broadcasted_iota(jnp.int32, (1, 1, nslots), 2)
+    lo3 = lower.reshape(1, 1, nslots)
+    up3 = upper.reshape(1, 1, nslots)
+    x3 = x[:, :, None]
+    # slot 0 has no lower bound — `x > -inf` would drop x == -inf, so the
+    # first slot escapes the strict lower test (keeps sum(cnt) == n and
+    # parity with the searchsorted oracle)
+    m = valid[:, :, None] & ((x3 > lo3) | (j == 0)) & (x3 <= up3)
+    cnt = jnp.sum(m.astype(jnp.int32), axis=(0, 1))
+    bsum = jnp.sum(jnp.where(m, x3, jnp.float32(0.0)), axis=(0, 1))
+    return cnt, bsum
+
+
+def _histogram_kernel(y_ref, x_ref, cnt_ref, sum_ref, *, n, block_rows):
+    b = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)  # (block_rows, LANES)
+    valid = _valid_mask(b, x.shape, n, block_rows)
+    cnt, bsum = _bin_tile(x, valid, y_ref[0], y_ref[1])
+    cnt_ref[0, :] = cnt
+    sum_ref[0, :] = bsum
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def cp_histogram(
+    x: jax.Array,
+    edges: jax.Array,
+    *,
+    block_rows: int = DEF_HIST_BLOCK_ROWS,
+    interpret: bool = False,
+):
+    """Binned data pass: ``x`` (n,), realized bracket edges (nbins+1,)
+    (monotone non-decreasing; build them with ``kernels.ref.bin_edges``).
+
+    Returns ``(cnt, bsum)`` of shape ``(nbins + 2,)`` — counts int32
+    (bit-identical to ``kernels.ref.cp_histogram_ref``), sums f32.
+    """
+    n = x.size
+    nbins = edges.shape[-1] - 1
+    x2, nblocks = _pad_to_tiles(x.reshape(-1), block_rows)
+    lower, upper = _slot_bounds(
+        jnp.asarray(edges, jnp.float32).reshape(nbins + 1))
+    y = jnp.stack([lower, upper])  # (2, nbins + 2)
+
+    cnt, bsum = pl.pallas_call(
+        functools.partial(_histogram_kernel, n=n, block_rows=block_rows),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # slot bounds: tiny
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nbins + 2), lambda i: (i, 0)),
+            pl.BlockSpec((1, nbins + 2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, nbins + 2), jnp.int32),
+            jax.ShapeDtypeStruct((nblocks, nbins + 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(y, x2)
+    return jnp.sum(cnt, axis=0), jnp.sum(bsum, axis=0)
+
+
+def _histogram_batched_kernel(y_ref, x_ref, cnt_ref, sum_ref, *, n,
+                              block_rows):
+    r = pl.program_id(0)  # problem row
+    b = pl.program_id(1)  # block within the row
+    x = x_ref[0].astype(jnp.float32)  # (block_rows, LANES)
+    valid = _valid_mask(b, x.shape, n, block_rows)
+    cnt, bsum = _bin_tile(x, valid, y_ref[0, r], y_ref[1, r])
+    cnt_ref[0, 0, :] = cnt
+    sum_ref[0, 0, :] = bsum
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def cp_histogram_batched(
+    x: jax.Array,
+    edges: jax.Array,
+    *,
+    block_rows: int = DEF_HIST_BLOCK_ROWS,
+    interpret: bool = False,
+):
+    """Row-wise binned pass: ``x`` (B, n), per-row realized edges
+    ``(B, nbins+1)``.  Returns ``(cnt, bsum)`` of shape ``(B, nbins + 2)``."""
+    bsz, n = x.shape
+    nbins = edges.shape[-1] - 1
+    x3, nblocks = _pad_to_tiles(x, block_rows)
+    lower, upper = _slot_bounds(
+        jnp.asarray(edges, jnp.float32).reshape(bsz, nbins + 1))
+    y = jnp.stack([lower, upper])  # (2, B, nbins + 2)
+
+    cnt, bsum = pl.pallas_call(
+        functools.partial(_histogram_batched_kernel, n=n,
+                          block_rows=block_rows),
+        grid=(bsz, nblocks),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((1, block_rows, LANES), lambda r, b: (r, b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, nbins + 2), lambda r, b: (r, b, 0)),
+            pl.BlockSpec((1, 1, nbins + 2), lambda r, b: (r, b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, nblocks, nbins + 2), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, nblocks, nbins + 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(y, x3)
+    return jnp.sum(cnt, axis=1), jnp.sum(bsum, axis=1)
+
+
+def _histogram_multi_kernel(y_ref, x_ref, cnt_ref, sum_ref, *, n, npiv,
+                            block_rows):
+    """One x tile, ALL K brackets: like ``_multi_kernel``, the tile is read
+    HBM -> VMEM once and every live bracket's histogram is computed from the
+    resident tile (K is static, the bracket loop unrolls at trace time)."""
+    b = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)  # (block_rows, LANES)
+    valid = _valid_mask(b, x.shape, n, block_rows)
+    for j in range(npiv):  # static unroll
+        cnt, bsum = _bin_tile(x, valid, y_ref[0, j], y_ref[1, j])
+        cnt_ref[0, j, :] = cnt
+        sum_ref[0, j, :] = bsum
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def cp_histogram_multi(
+    x: jax.Array,
+    edges: jax.Array,
+    *,
+    block_rows: int = DEF_HIST_BLOCK_ROWS,
+    interpret: bool = False,
+):
+    """Shared-x multi-bracket binned pass: ``x`` (n,), per-pivot realized
+    edges ``(K, nbins+1)``.  Returns ``(cnt, bsum)`` of shape
+    ``(K, nbins + 2)``."""
+    n = x.size
+    npiv, nbins = edges.shape[0], edges.shape[-1] - 1
+    x2, nblocks = _pad_to_tiles(x.reshape(-1), block_rows)
+    lower, upper = _slot_bounds(jnp.asarray(edges, jnp.float32))
+    y = jnp.stack([lower, upper])  # (2, K, nbins + 2)
+
+    cnt, bsum = pl.pallas_call(
+        functools.partial(_histogram_multi_kernel, n=n, npiv=npiv,
+                          block_rows=block_rows),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, npiv, nbins + 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, npiv, nbins + 2), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, npiv, nbins + 2), jnp.int32),
+            jax.ShapeDtypeStruct((nblocks, npiv, nbins + 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(y, x2)
+    return jnp.sum(cnt, axis=0), jnp.sum(bsum, axis=0)

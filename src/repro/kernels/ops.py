@@ -5,10 +5,20 @@ is numerically identical and XLA fuses it into one pass, so it is the
 default.  ``backend='pallas_interpret'`` forces the kernel body through the
 Pallas interpreter (Python emulation) — used by the tests to validate the
 TPU kernel logic on CPU.
+
+f64 policy: the Pallas kernels accumulate in f32 (``x_ref[...].astype(
+jnp.float32)`` — TPUs have no f64 VPU), so under x64 their counts would be
+computed at f32 resolution: two f64 values straddling a pivot can collapse
+onto it after the downcast, and the exactness certificates would lie.  Every
+dispatcher therefore reroutes f64 inputs to the dtype-preserving jnp oracle,
+even when ``backend='pallas'`` was requested.  ``pallas_interpret`` is NOT
+rerouted — it exists precisely to emulate the TPU kernel (including its f32
+accumulation) on CPU.
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import cp_objective, ref
 
@@ -20,10 +30,19 @@ def _on_tpu() -> bool:
         return False
 
 
-def fused_partials(x, y, *, backend: str | None = None):
-    """(sum_pos, sum_neg, n_lt, n_le) for pivot y — kernel-accelerated."""
+def _resolve_backend(backend: str | None, x: jax.Array) -> str:
     if backend is None:
         backend = "pallas" if _on_tpu() else "jnp"
+    if backend == "pallas" and x.dtype == jnp.float64:
+        # dtype-preserving variant: the f32-accumulating kernel would lose
+        # sub-f32 resolution (see module docstring)
+        backend = "jnp"
+    return backend
+
+
+def fused_partials(x, y, *, backend: str | None = None):
+    """(sum_pos, sum_neg, n_lt, n_le) for pivot y — kernel-accelerated."""
+    backend = _resolve_backend(backend, x)
     if backend == "pallas":
         return cp_objective.cp_partials(x, y)
     if backend == "pallas_interpret":
@@ -35,8 +54,7 @@ def fused_partials(x, y, *, backend: str | None = None):
 
 def fused_partials_batched(x, y, *, backend: str | None = None):
     """Row-wise variant over (B, n) problems."""
-    if backend is None:
-        backend = "pallas" if _on_tpu() else "jnp"
+    backend = _resolve_backend(backend, x)
     if backend == "pallas":
         return cp_objective.cp_partials_batched(x, y)
     if backend == "pallas_interpret":
@@ -53,12 +71,60 @@ def fused_partials_multi(x, y, *, backend: str | None = None):
     emits partials for every live pivot (K× less HBM traffic than K
     independent sweeps).
     """
-    if backend is None:
-        backend = "pallas" if _on_tpu() else "jnp"
+    backend = _resolve_backend(backend, x)
     if backend == "pallas":
         return cp_objective.cp_partials_multi(x, y)
     if backend == "pallas_interpret":
         return cp_objective.cp_partials_multi(x, y, interpret=True)
     if backend == "jnp":
         return ref.cp_partials_multi_ref(x, y)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def fused_histogram(x, edges, *, backend: str | None = None):
+    """Binned data pass: (count, sum) per bracket sub-interval.
+
+    ``x`` (n,), realized bracket edges ``(nbins+1,)`` built ONCE by the
+    caller via ``kernels.ref.bin_edges`` (the exactness contract: every
+    consumer compares against the same edge array, nobody recomputes edge
+    arithmetic).  Returns ``(cnt, bsum)`` of shape ``(nbins + 2,)`` (slot
+    layout in ``kernels.ref.cp_histogram_ref``).  One sweep buys
+    log2(nbins) bisection-equivalents of bracket narrowing.
+    """
+    backend = _resolve_backend(backend, x)
+    if backend == "pallas":
+        return cp_objective.cp_histogram(x, edges)
+    if backend == "pallas_interpret":
+        return cp_objective.cp_histogram(x, edges, interpret=True)
+    if backend == "jnp":
+        return ref.cp_histogram_ref(x, edges)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def fused_histogram_batched(x, edges, *, backend: str | None = None):
+    """Row-wise binned pass: ``x`` (B, n), per-row edges ``(B, nbins+1)``."""
+    backend = _resolve_backend(backend, x)
+    if backend == "pallas":
+        return cp_objective.cp_histogram_batched(x, edges)
+    if backend == "pallas_interpret":
+        return cp_objective.cp_histogram_batched(x, edges, interpret=True)
+    if backend == "jnp":
+        return ref.cp_histogram_batched_ref(x, edges)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def fused_histogram_multi(x, edges, *, backend: str | None = None):
+    """Shared-x multi-bracket binned pass: ``x`` (n,), per-pivot edges
+    ``(K, nbins+1)``.
+
+    On TPU each x tile is read into VMEM once for all K live brackets,
+    exactly like the multi-pivot FG kernel.
+    """
+    backend = _resolve_backend(backend, x)
+    if backend == "pallas":
+        return cp_objective.cp_histogram_multi(x, edges)
+    if backend == "pallas_interpret":
+        return cp_objective.cp_histogram_multi(x, edges, interpret=True)
+    if backend == "jnp":
+        return ref.cp_histogram_multi_ref(x, edges)
     raise ValueError(f"unknown backend {backend!r}")

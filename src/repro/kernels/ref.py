@@ -39,3 +39,79 @@ def cp_partials_multi_ref(x: jax.Array, y: jax.Array):
     return jax.vmap(cp_partials_ref, in_axes=(None, 0))(
         x.reshape(-1).astype(dt), jnp.asarray(y, dt)
     )
+
+
+# ---------------------------------------------------------------------------
+# Binned bracket descent: histogram oracles
+# ---------------------------------------------------------------------------
+
+
+def bin_edges(lo, hi, nbins: int):
+    """Realized fp bin-edge values ``e_j = clip(lo + w*j, lo, hi)`` with
+    ``w = hi/nbins - lo/nbins`` and ``e_nbins`` forced to ``hi`` exactly,
+    appended as a trailing axis of size ``nbins + 1``.
+
+    SINGLE SOURCE OF TRUTH for edge construction: the engine computes the
+    edges ONCE per sweep with this function and passes the realized array
+    to the histogram kernels/oracles, which only COMPARE against it — no
+    consumer ever recomputes edge arithmetic (XLA FMA contraction makes
+    recomputed ``lo + w*j`` fusion-context-dependent), so histogram counts
+    stay bit-consistent with the engine's later ``x <= e_j`` narrowing and
+    finalize comparisons.  The sequence is monotone non-decreasing in fp
+    (``w >= 0``, ``w*j`` and ``lo + t`` are monotone, clip preserves
+    order), which the bin-index search relies on.
+
+    Overflow safety: ``(hi - lo)`` overflows f32 for full-range brackets
+    (e.g. data spanning ±3e38 — width inf, NaN edges, garbage descent), so
+    ``w`` divides BEFORE differencing (each term <= f32max/nbins; their
+    difference <= f32max for nbins >= 2) and ``lo + w*j`` — which can still
+    overflow for large j — is clipped into ``[lo, hi]`` (collapsed top bins
+    are just empty).
+    """
+    lo = jnp.asarray(lo)
+    hi = jnp.asarray(hi, lo.dtype)
+    w = hi / nbins - lo / nbins
+    j = jnp.arange(nbins + 1)
+    e = jnp.clip(lo[..., None] + w[..., None] * j.astype(lo.dtype),
+                 lo[..., None], hi[..., None])
+    return jnp.where(j == nbins, hi[..., None], e)
+
+
+def cp_histogram_ref(x: jax.Array, edges: jax.Array):
+    """Oracle for kernels.cp_objective.cp_histogram: ``x`` (n,), realized
+    edges ``(nbins+1,)`` (monotone, from :func:`bin_edges`).
+
+    Slot layout (``nbins + 2`` slots): 0 = ``x <= e_0``; j in 1..nbins =
+    ``e_{j-1} < x <= e_j``; nbins+1 = ``x > e_nbins``.  Counts int32, sums
+    in the promoted accumulate dtype (f64 stays f64 — the x64-exact path).
+    Memory O(n): bin indices by binary search against the realized edges,
+    then one scatter-add per output.
+    """
+    dt = _accum_dtype(x)
+    x = x.reshape(-1).astype(dt)
+    nbins = edges.shape[-1] - 1
+    # no value-changing cast: the engine builds edges at (at least) the
+    # promoted dtype, so this astype is an identity
+    edges = jnp.asarray(edges, dt).reshape(nbins + 1)
+    # slot = count(edges < x): 0 for x <= e_0, j for e_{j-1} < x <= e_j,
+    # nbins+1 for x > e_nbins — searchsorted('left') on the sorted edges.
+    slot = jnp.searchsorted(edges, x, side="left").astype(jnp.int32)
+    nslots = nbins + 2
+    cnt = jnp.zeros((nslots,), jnp.int32).at[slot].add(1)
+    bsum = jnp.zeros((nslots,), dt).at[slot].add(x)
+    return cnt, bsum
+
+
+def cp_histogram_batched_ref(x: jax.Array, edges: jax.Array):
+    """Oracle for kernels.cp_objective.cp_histogram_batched: ``x`` (B, n),
+    per-row edges ``(B, nbins+1)``; returns ``(cnt, bsum)`` of shape
+    ``(B, nbins + 2)``."""
+    return jax.vmap(cp_histogram_ref)(x, edges)
+
+
+def cp_histogram_multi_ref(x: jax.Array, edges: jax.Array):
+    """Oracle for kernels.cp_objective.cp_histogram_multi: one shared ``x``
+    (n,), per-pivot edges ``(K, nbins+1)``; returns ``(cnt, bsum)`` of
+    shape ``(K, nbins + 2)``."""
+    return jax.vmap(cp_histogram_ref, in_axes=(None, 0))(x.reshape(-1),
+                                                         edges)

@@ -122,6 +122,136 @@ def test_ops_dispatch():
     check_partials(b, a)
 
 
+# ---------------------------------------------------------------------------
+# binned histogram kernels (interpret mode) vs jnp oracles
+# ---------------------------------------------------------------------------
+
+
+def check_histogram(got, want, n):
+    cnt, bsum = got
+    cnt_w, bsum_w = want
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cnt_w))
+    np.testing.assert_allclose(np.float32(bsum), np.float32(bsum_w),
+                               rtol=2e-5, atol=1e-5)
+    # count invariant: the slot layout partitions the whole array
+    assert int(jnp.sum(cnt)) == n
+
+
+@pytest.mark.parametrize("n", [1, 7, 1024, 4097, 65537])
+@pytest.mark.parametrize("nbins", [8, 128])
+def test_cp_histogram_shapes(n, nbins):
+    rng = np.random.default_rng(n + nbins)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    edges = ref.bin_edges(jnp.float32(-1.0), jnp.float32(1.5), nbins)
+    got = cp_objective.cp_histogram(x, edges, block_rows=8, interpret=True)
+    want = ref.cp_histogram_ref(x, edges)
+    check_histogram(got, want, n)
+
+
+def test_cp_histogram_edges_on_data_and_degenerate():
+    """Bracket ends ON data values exercise the open/closed slot bounds;
+    lo == hi exercises the collapsed-bracket layout (all mass in the two
+    outer slots).  Counts only: the ±1e9 cancellation makes slot sums
+    reduction-order-defined (same policy as the FG-kernel tie tests)."""
+    x = jnp.asarray(
+        np.array([0.0, 0.0, 0.0, 1e9, -1e9, 0.5, 0.5, -0.5] * 97, np.float32)
+    )
+    for lo, hi in [(0.0, 0.5), (-0.5, 0.5), (-1e9, 1e9), (0.5, 0.5),
+                   (2e9, 3e9)]:
+        edges = ref.bin_edges(jnp.float32(lo), jnp.float32(hi), 8)
+        got = cp_objective.cp_histogram(x, edges, block_rows=8,
+                                        interpret=True)
+        want = ref.cp_histogram_ref(x, edges)
+        np.testing.assert_array_equal(np.asarray(got[0]),
+                                      np.asarray(want[0]))
+        assert int(jnp.sum(got[0])) == x.size
+
+
+@pytest.mark.parametrize("bsz,n", [(1, 100), (3, 1024), (5, 4097)])
+def test_cp_histogram_batched(bsz, n):
+    rng = np.random.default_rng(bsz * n)
+    x = jnp.asarray(rng.standard_normal((bsz, n)).astype(np.float32))
+    lo = jnp.asarray(rng.standard_normal(bsz).astype(np.float32) - 1.0)
+    hi = lo + jnp.asarray(np.abs(rng.standard_normal(bsz)).astype(np.float32)
+                          + 0.5)
+    edges = ref.bin_edges(lo, hi, 16)
+    got = cp_objective.cp_histogram_batched(x, edges, block_rows=8,
+                                            interpret=True)
+    want = ref.cp_histogram_batched_ref(x, edges)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_allclose(np.float32(got[1]), np.float32(want[1]),
+                               rtol=2e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(jnp.sum(got[0], axis=1)),
+                                  np.full(bsz, n))
+
+
+@pytest.mark.parametrize("n,npiv", [(1, 1), (100, 3), (4097, 5), (65537, 2)])
+def test_cp_histogram_multi(n, npiv):
+    rng = np.random.default_rng(n * npiv + 1)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    lo = jnp.asarray(rng.standard_normal(npiv).astype(np.float32) - 1.0)
+    hi = lo + 1.25
+    edges = ref.bin_edges(lo, hi, 16)
+    got = cp_objective.cp_histogram_multi(x, edges, block_rows=8,
+                                          interpret=True)
+    want = ref.cp_histogram_multi_ref(x, edges)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_allclose(np.float32(got[1]), np.float32(want[1]),
+                               rtol=2e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(jnp.sum(got[0], axis=1)),
+                                  np.full(npiv, n))
+
+
+def test_cp_histogram_infinities_and_full_range():
+    """-inf/+inf data values must land in the outer slots (slot 0 has no
+    lower bound), and full-f32-range brackets must not overflow the bin
+    width — kernel and oracle stay bit-identical in counts."""
+    x = jnp.asarray(np.array(
+        [-np.inf, np.inf, -3e38, 3e38, 0.0, 1.0, -1.0] * 23, np.float32))
+    for lo, hi in [(0.0, 1.0), (-3e38, 3e38), (-1.0, 1.0)]:
+        edges = ref.bin_edges(jnp.float32(lo), jnp.float32(hi), 8)
+        got = cp_objective.cp_histogram(x, edges, block_rows=8,
+                                        interpret=True)
+        want = ref.cp_histogram_ref(x, edges)
+        np.testing.assert_array_equal(np.asarray(got[0]),
+                                      np.asarray(want[0]))
+        assert int(jnp.sum(got[0])) == x.size
+    # batched + multi variants share _bin_tile; one spot-check each
+    xb = x.reshape(1, -1)
+    eb = ref.bin_edges(jnp.asarray([-3e38], jnp.float32),
+                       jnp.asarray([3e38], jnp.float32), 8)
+    gb = cp_objective.cp_histogram_batched(xb, eb, block_rows=8,
+                                           interpret=True)
+    wb = ref.cp_histogram_batched_ref(xb, eb)
+    np.testing.assert_array_equal(np.asarray(gb[0]), np.asarray(wb[0]))
+    em = ref.bin_edges(jnp.asarray([0.0], jnp.float32),
+                       jnp.asarray([1.0], jnp.float32), 8)
+    gm = cp_objective.cp_histogram_multi(x, em, block_rows=8,
+                                         interpret=True)
+    wm = ref.cp_histogram_multi_ref(x, em)
+    np.testing.assert_array_equal(np.asarray(gm[0]), np.asarray(wm[0]))
+
+
+def test_ops_dispatch_histogram():
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(rng.standard_normal(4096).astype(np.float32))
+    e = ref.bin_edges(jnp.float32(-0.7), jnp.float32(0.9), 32)
+    a = ops.fused_histogram(x, e, backend="jnp")
+    b = ops.fused_histogram(x, e, backend="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(b[0]), np.asarray(a[0]))
+    np.testing.assert_allclose(np.float32(b[1]), np.float32(a[1]),
+                               rtol=2e-5, atol=1e-5)
+    xb = x.reshape(4, 1024)
+    e4 = ref.bin_edges(jnp.full((4,), -0.7, jnp.float32),
+                       jnp.full((4,), 0.9, jnp.float32), 32)
+    a = ops.fused_histogram_batched(xb, e4, backend="jnp")
+    b = ops.fused_histogram_batched(xb, e4, backend="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(b[0]), np.asarray(a[0]))
+    a = ops.fused_histogram_multi(x, e4, backend="jnp")
+    b = ops.fused_histogram_multi(x, e4, backend="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(b[0]), np.asarray(a[0]))
+
+
 def test_selection_through_kernel_backend():
     """End-to-end: CP selection driven by the Pallas (interpret) kernel."""
     from repro.core import selection
