@@ -1,6 +1,6 @@
 """Batched engine (cp vs binned) vs vmap-of-scalar-solver vs jnp.sort.
 
-Two tentpole claims ride this bench:
+Three tentpole claims ride this bench:
 
 * PR 1 (batched-first): one engine iterating a (B,) state block beats B
   lock-stepped scalar solvers (``jax.vmap`` of the public scalar API) and
@@ -10,6 +10,11 @@ Two tentpole claims ride this bench:
   the ``sweeps_binned`` / ``iters_cp`` columns are the data-pass counts per
   solve (each binned sweep and each cp iteration is exactly one pass over
   the (B, n) block).
+* PR 3 (weighted order statistics): the weighted-binned engine keeps the
+  ~3-sweep schedule against a target cumulative MASS (the ``weighted_grid``
+  records, bit-identical to the numpy sorted-cumsum oracle), vs the
+  weighted sort-cumsum baseline (argsort + weight gather + cumsum +
+  searchsorted — the thing every sort-based weighted median pays).
 
 Emits the usual CSV rows plus one ``BENCH_JSON`` line; ``run(json_path=...)``
 (the ``benchmarks/run.py --json`` path) additionally writes the records to a
@@ -87,9 +92,64 @@ def run(full: bool = False, json_path: str | None = None):
             speedup_binned_over_cp=times["batched_cp"]
             / times["batched_binned"],
         ))
+    # ---- weighted rows: weighted-binned vs weighted sort-cumsum ----------
+    wgrid = [(1, 1 << 16), (8, 1 << 16), (1, 1 << 20)]
+    if full:
+        wgrid += [(8, 1 << 20)]
+    wrecords = []
+    for b, n in wgrid:
+        x = rng.standard_normal((b, n)).astype(np.float32)
+        # integer weights: masses exactly summable, so every method must be
+        # bit-identical to the f64 sorted-cumsum oracle
+        w = rng.integers(1, 4, (b, n)).astype(np.float32)
+        wks = (0.5 * w.sum(axis=1)).astype(np.float32)
+        xj, wj, wkj = jnp.asarray(x), jnp.asarray(w), jnp.asarray(wks)
+        want = np.empty(b, np.float32)
+        for i in range(b):
+            o = np.argsort(x[i], kind="stable")
+            c = np.cumsum(w[i][o].astype(np.float64))
+            want[i] = x[i][o][np.searchsorted(c, wks[i], "left")]
+
+        impls = {
+            "weighted_binned": jax.jit(lambda v, wv, t: selection
+                                       .weighted_select_rows(
+                                           v, wv, t, method="binned").value),
+            "weighted_cp": jax.jit(lambda v, wv, t: selection
+                                   .weighted_select_rows(
+                                       v, wv, t, method="cp").value),
+            "weighted_sort_cumsum": jax.jit(
+                lambda v, wv, t: selection.weighted_select_rows(
+                    v, wv, t, method="sort").value),
+        }
+        times = {}
+        for name, fn in impls.items():
+            got = np.asarray(fn(xj, wj, wkj))
+            assert np.array_equal(got, want), (name, b, n)
+            times[name] = timeit(fn, xj, wj, wkj, reps=3)
+
+        sweeps_w = int(jnp.max(selection.weighted_select_rows(
+            xj, wj, wkj, method="binned").iters))
+        iters_wcp = int(jnp.max(selection.weighted_select_rows(
+            xj, wj, wkj, method="cp").iters))
+        for name, t in times.items():
+            rows.append((f"{name}/B={b}/n={n}", t * 1e6,
+                         f"{b * n / t / 1e6:.1f}Melem/s"))
+        rows.append((f"weighted_sweeps_binned_vs_cp/B={b}/n={n}",
+                     sweeps_w, f"cp={iters_wcp}"))
+        wrecords.append(dict(
+            B=b, n=n,
+            sweeps=sweeps_w, iters_cp=iters_wcp,
+            us_per_call=times["weighted_binned"] * 1e6,
+            us_weighted_cp=times["weighted_cp"] * 1e6,
+            us_weighted_sort=times["weighted_sort_cumsum"] * 1e6,
+            speedup_binned_over_sort=times["weighted_sort_cumsum"]
+            / times["weighted_binned"],
+        ))
+
     emit(rows)
     payload = {"bench": "batched_selection", "exact": True,
-               "backend": jax.default_backend(), "grid": records}
+               "backend": jax.default_backend(), "grid": records,
+               "weighted_grid": wrecords}
     print("BENCH_JSON " + json.dumps(payload))
     if json_path is not None:
         with open(json_path, "w") as f:

@@ -7,6 +7,7 @@ goes through the ``Evaluator`` protocol (see ``repro.core.objective``).
 """
 from repro.core.objective import (
     FG,
+    WFG,
     Evaluator,
     FnEvaluator,
     RowsEvaluator,
@@ -16,6 +17,7 @@ from repro.core.objective import (
     eval_partials,
     fg_from_partials,
     os_weights,
+    wfg_from_partials,
 )
 from repro.core.selection import (
     EXACT_HIT,
@@ -31,14 +33,24 @@ from repro.core.selection import (
     quantiles,
     select_rows,
     topk_threshold,
+    weighted_median,
+    weighted_multi_order_statistic,
+    weighted_order_statistic,
+    weighted_quantile,
+    weighted_quantiles,
+    weighted_select_rows,
 )
 
 __all__ = [
-    "FG", "eval_fg", "eval_partials", "fg_from_partials", "os_weights",
+    "FG", "WFG", "eval_fg", "eval_partials", "fg_from_partials",
+    "os_weights", "wfg_from_partials",
     "Evaluator", "FnEvaluator", "RowsEvaluator", "SharedEvaluator",
     "ShardedEvaluator",
     "SelectResult", "order_statistic", "select_rows",
     "multi_order_statistic", "quantiles", "median", "quantile",
     "topk_threshold",
+    "weighted_order_statistic", "weighted_select_rows",
+    "weighted_multi_order_statistic", "weighted_median",
+    "weighted_quantile", "weighted_quantiles",
     "METHODS", "EXACT_HIT", "HYBRID_SORT", "TIE_FALLBACK", "NOT_CONVERGED",
 ]

@@ -280,6 +280,155 @@ def local_order_statistic(
     )
 
 
+def local_weighted_order_statistic(
+    x_local: jax.Array,
+    w_local: jax.Array,
+    wk,
+    axes: AxisNames,
+    *,
+    maxit: int = 64,
+    cap_local: int = 4096,
+    backend: Optional[str] = None,
+    nbins: int = selection.DEF_NBINS,
+) -> selection.SelectResult:
+    """Weighted order statistic of the *global* sharded array: the smallest
+    element whose global cumulative weight reaches ``wk``.  Call inside
+    shard_map; weights are sharded exactly like the data.
+
+    Binned rounds only: each round is one local weighted histogram pass +
+    ONE psum of the ``(nbins + 2,)`` slot weight-MASS vector (the
+    narrowing signal); the slot COUNTS stay un-psum'd — they feed the
+    per-shard cap bookkeeping, which must be local.  The bracket shrinks
+    by a factor of ``nbins`` per collective round; the finalize compacts
+    per-shard (value, weight) pairs, all_gathers the tiny buffers and
+    resolves by sorted prefix weights — the weighted analogue of the
+    paper's small-array ``z`` step.
+    """
+    from repro.kernels.ref import bin_edges  # deferred: core <-> kernels
+
+    x_local = x_local.reshape(-1)
+    w_local = jnp.asarray(w_local).reshape(-1)
+    n_local = x_local.size
+    axes_t = _axes_tuple(axes)
+    ev = ShardedEvaluator(x_local, wk, axes, backend=backend,
+                          weights=w_local)
+    wkk = ev.k  # target mass clipped to the global total
+    dtype = x_local.dtype
+    # brackets narrow to realized f32 edge values — keep the bracket state
+    # at (at least) the kernels' f32 accumulation precision
+    dt = jnp.promote_types(dtype, jnp.float32)
+    wl = w_local.astype(wkk.dtype)
+
+    xmin, xmax, _wmean = ev.init_stats()
+
+    s0 = _DistState(
+        yL=xmin.astype(dt),
+        fL=jnp.asarray(0, dt), gL=jnp.asarray(0, dt),   # binned: unused
+        yR=xmax.astype(dt),
+        fR=jnp.asarray(0, dt), gR=jnp.asarray(0, dt),
+        loc_cleL=_pcast_varying(jnp.asarray(0, jnp.int32), axes_t),
+        loc_cleR=_pcast_varying(jnp.asarray(n_local, jnp.int32), axes_t),
+        max_in=jnp.asarray(n_local, jnp.int32),
+        t_exact=jnp.asarray(jnp.nan, dt),
+        found_exact=jnp.asarray(False),
+        it=jnp.asarray(0, jnp.int32),
+    )
+
+    def cond(carry):
+        s, stalled = carry
+        return ((~s.found_exact) & ~stalled & (s.max_in > cap_local)
+                & (s.it < maxit) & (s.yR > s.yL))
+
+    def body(carry):
+        s, stalled = carry
+        # realized edges computed ONCE, shared by the local data pass and
+        # the narrowing decision (the exactness contract); only the slot
+        # MASSES psum — the counts stay per-shard for the cap rule
+        edges = bin_edges(s.yL, s.yR, nbins)
+        cnt_loc, wcnt_loc, _ = ev.local_histogram(edges)
+        cumw = jnp.cumsum(_psum(wcnt_loc, axes)[:-1])
+        yLn, yRn, _, _, jm1, jstar, hit_lo, exact, stall = \
+            selection.binned_descent_step(cumw, edges, s.yL, s.yR, wkk)
+        # late hit_lo can only be an inexact-mass ulp-flip: fail safe (the
+        # engine loop applies the same demotion — see
+        # selection.weighted_binned_loop_batched)
+        late_hit_lo = hit_lo & (s.it > 0)
+        exact = exact & ~late_hit_lo
+        stall = stall | late_hit_lo
+        cum_loc = jnp.cumsum(cnt_loc[:-1])
+        locL, locR = cum_loc[jm1], cum_loc[jstar]
+        upd = ~exact & ~stall
+        loc_cleL = jnp.where(upd, locL, s.loc_cleL)
+        loc_cleR = jnp.where(upd, locR, s.loc_cleR)
+        return _DistState(
+            yL=jnp.where(upd, yLn, s.yL), fL=s.fL, gL=s.gL,
+            yR=jnp.where(upd, yRn, s.yR), fR=s.fR, gR=s.gR,
+            loc_cleL=loc_cleL, loc_cleR=loc_cleR,
+            max_in=_pmax(loc_cleR - loc_cleL, axes),
+            t_exact=jnp.where(exact, jnp.where(hit_lo, s.yL, yRn),
+                              s.t_exact),
+            found_exact=s.found_exact | exact,
+            it=s.it + 1,
+        ), stalled | stall
+
+    s, _ = jax.lax.while_loop(cond, body, (s0, jnp.asarray(False)))
+
+    # ---- weighted distributed finalize: compact pairs, gather, sort ----
+    big = jnp.asarray(jnp.inf, dtype)
+    mask_in = (x_local > s.yL) & (x_local <= s.yR)
+    cLw = _psum(jnp.sum(jnp.where(x_local <= s.yL, wl, 0),
+                        dtype=wl.dtype), axes)
+    n_in = _psum(jnp.sum(mask_in, dtype=jnp.int32), axes)
+    loc_in = jnp.sum(mask_in, dtype=jnp.int32)
+    pos = jnp.cumsum(mask_in.astype(jnp.int32)) - 1
+    idx = jnp.where(mask_in, jnp.minimum(pos, cap_local), cap_local)
+    z = jnp.full((cap_local + 1,), big, dtype).at[idx].set(
+        jnp.where(mask_in, x_local, big))
+    zw = jnp.zeros((cap_local + 1,), wl.dtype).at[idx].set(
+        jnp.where(mask_in, wl, 0))
+    z_all, zw_all = z[:cap_local], zw[:cap_local]
+    for ax in axes_t:
+        z_all = jax.lax.all_gather(z_all, ax).reshape(-1)
+        zw_all = jax.lax.all_gather(zw_all, ax).reshape(-1)
+    order = jnp.argsort(z_all)
+    zs = z_all[order]
+    cumw = cLw + jnp.cumsum(zw_all[order])
+    reach = cumw >= wkk
+    sidx = jnp.argmax(reach).astype(jnp.int32)
+    ans_sort = zs[sidx]
+    ok_sort = (_pmax(loc_in, axes) <= cap_local) & reach[-1]
+
+    vnext = _pmin(jnp.min(jnp.where(x_local > s.yL, x_local, big)), axes)
+    w_le_v = _psum(jnp.sum(jnp.where(x_local <= vnext, wl, 0),
+                           dtype=wl.dtype), axes)
+    fallback_ok = (cLw < wkk) & (wkk <= w_le_v)
+
+    value = jnp.where(
+        s.found_exact, s.t_exact.astype(dtype),
+        jnp.where(ok_sort, ans_sort, jnp.where(fallback_ok, vnext,
+                                               s.yR.astype(dtype))),
+    )
+    status = jnp.where(
+        s.found_exact, selection.EXACT_HIT,
+        jnp.where(ok_sort, selection.HYBRID_SORT,
+                  jnp.where(fallback_ok, selection.TIE_FALLBACK,
+                            selection.NOT_CONVERGED)),
+    )
+    w_lt_max = _psum(jnp.sum(jnp.where(x_local < xmax, wl, 0),
+                             dtype=wl.dtype), axes)
+    # extreme shortcuts gated on the seed bracket (see the engine finalize:
+    # re-measured masses can rounding-flip near wk; only a bracket still AT
+    # the extreme may certify through them)
+    at_min = (cLw >= wkk) & (s.yL == xmin)
+    at_max = (w_lt_max < wkk) & (s.yR == xmax)
+    value = jnp.where(at_min, xmin, jnp.where(at_max, xmax, value))
+    status = jnp.where(at_min | at_max, selection.EXACT_HIT, status)
+    return selection.SelectResult(
+        value=value, iters=s.it, status=status.astype(jnp.int32),
+        y_lo=s.yL, y_hi=s.yR, n_in=n_in,
+    )
+
+
 def sharded_order_statistic(
     x: jax.Array,
     k,
@@ -314,6 +463,48 @@ def sharded_order_statistic(
 def sharded_median(x, mesh, in_spec, **kw):
     n = x.size
     return sharded_order_statistic(x, (n + 1) // 2, mesh, in_spec, **kw)
+
+
+def sharded_weighted_order_statistic(
+    x: jax.Array,
+    w: jax.Array,
+    wk,
+    mesh: jax.sharding.Mesh,
+    in_spec: P,
+    **kwargs,
+) -> selection.SelectResult:
+    """User-facing wrapper: shard_map the weighted distributed selection.
+
+    ``x`` and ``w`` share ``in_spec`` (weights live with their data).  The
+    result is fully replicated.
+    """
+    axes = tuple(
+        a for ax in in_spec for a in
+        ((ax,) if isinstance(ax, str) else tuple(ax or ()))
+    )
+
+    @functools.partial(
+        _compat.shard_map, mesh=mesh, in_specs=(in_spec, in_spec),
+        out_specs=jax.tree.map(lambda _: P(), selection.SelectResult(
+            *(0,) * 6)),
+        # outputs are semantically replicated (built from psum/all_gather
+        # results), but the static varying-axis analysis cannot prove it
+        check=False,
+    )
+    def run(x_local, w_local):
+        return local_weighted_order_statistic(x_local, w_local, wk, axes,
+                                              **kwargs)
+
+    return run(x, w)
+
+
+def sharded_weighted_median(x, w, mesh, in_spec, **kw):
+    """Lower weighted median of the sharded array (global mass / 2)."""
+    # same dtype rule as selection._total_mass: the target mass must live
+    # at the evaluator's accumulation dtype or the two can desynchronize
+    W = selection._total_mass(x, jnp.asarray(w))
+    return sharded_weighted_order_statistic(x, w, 0.5 * W, mesh, in_spec,
+                                            **kw)
 
 
 def sharded_quantile(x, q, mesh, in_spec, **kw):

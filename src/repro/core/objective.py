@@ -123,6 +123,60 @@ def eval_fg_batched(x: jax.Array, y: jax.Array, k) -> FG:
 
 
 # ---------------------------------------------------------------------------
+# Weighted objective: F_w(y) = sum_i w_i * rho(x_i - y)
+# ---------------------------------------------------------------------------
+#
+# The minimizer of the weighted objective is the weighted order statistic —
+# the smallest element v with cumulative weight W_le(v) = sum(w_i : x_i <= v)
+# reaching the target mass ``wk``.  Everything mirrors the unweighted story
+# with counts replaced by weight MASS: choosing the slopes
+#
+#     alpha = (W - wk) / W,   beta = wk / W        (W = total weight)
+#
+# puts the subdifferential zero-crossing exactly at mass wk, and the
+# normalized one-sided derivatives collapse to
+#
+#     g_lo(y) = (W_lt(y) - wk) / W,   g_hi(y) = (W_le(y) - wk) / W,
+#
+# so the element-hit certificate is the mass invariant
+#
+#     W_lt(y) < wk <= W_le(y)   <=>   y is the weighted order statistic
+#
+# (W_lt < W_le forces positive mass AT y, i.e. y is a data element).  The
+# integer counts still ride along: buffer capacity is an element COUNT, so
+# the engine's cap-based stopping rule keeps using n_lt/n_le while the
+# narrowing and certificates use the masses.  Uniform weights w_i = 1 with
+# wk = k reproduce the unweighted decisions exactly (mass == count).
+
+
+class WFG(NamedTuple):
+    """Weighted objective value, subdifferential and masses at a pivot."""
+
+    f: jax.Array      # objective value (normalized by total weight W)
+    g_lo: jax.Array   # left one-sided derivative
+    g_hi: jax.Array   # right one-sided derivative
+    w_lt: jax.Array   # mass(x <  y) — drives narrowing + certificates
+    w_le: jax.Array   # mass(x <= y)
+    n_lt: jax.Array   # count(x <  y), int32 — drives the cap stopping rule
+    n_le: jax.Array   # count(x <= y), int32
+
+
+def wfg_from_partials(partials, W, wk) -> WFG:
+    """Combine the six additive weighted partials into the WFG septuple."""
+    wsum_pos, wsum_neg, w_lt, w_le, n_lt, n_le = partials
+    dt = wsum_pos.dtype
+    Wf = jnp.asarray(W, dt)
+    wkf = jnp.asarray(wk, dt)
+    alpha = (Wf - wkf) / Wf
+    beta = wkf / Wf
+    f = (beta * wsum_pos + alpha * wsum_neg) / Wf
+    g_lo = (w_lt - wkf) / Wf
+    g_hi = (w_le - wkf) / Wf
+    return WFG(f=f, g_lo=g_lo, g_hi=g_hi, w_lt=w_lt, w_le=w_le,
+               n_lt=n_lt, n_le=n_le)
+
+
+# ---------------------------------------------------------------------------
 # Evaluator abstraction — the batched-first engine's data interface
 # ---------------------------------------------------------------------------
 
@@ -159,34 +213,73 @@ class Evaluator(Protocol):
     def histogram(self, edges: jax.Array) -> tuple[jax.Array, jax.Array]: ...
 
 
+def _weight_accum_dtype(x, w):
+    """Mass accumulation dtype: the kernels' f32 floor, full precision for
+    either-f64 operands.  SINGLE source of truth lives with the oracles —
+    the engine's wk/W dtype must never desynchronize from the kernels'
+    accumulation dtype or the weighted certificates lie."""
+    from repro.kernels.ref import _waccum_dtype  # deferred: core <-> kernels
+
+    return _waccum_dtype(x, w)
+
+
 class RowsEvaluator:
     """Independent rows: ``x`` is (B, n), one pivot and one ``k`` per row.
 
     The data pass is ``kernels.ops.fused_partials_batched`` (Pallas on TPU,
     fused jnp elsewhere, Pallas-interpret for kernel validation on CPU).
+
+    The optional weights leg: with ``weights`` (B, n), ``k`` is reinterpreted
+    as the per-row TARGET CUMULATIVE MASS ``wk`` (float, clipped to the
+    row's total weight ``W``), ``__call__`` returns :class:`WFG` and
+    ``histogram`` the weighted ``(cnt, wcnt, wsum)`` slot triple — the
+    weighted engine loops in :mod:`repro.core.selection` consume both.
     """
 
-    def __init__(self, x: jax.Array, k, *, backend: str | None = None):
+    def __init__(self, x: jax.Array, k, *, backend: str | None = None,
+                 weights: jax.Array | None = None):
         from repro.kernels import ops as kops  # deferred: core <-> kernels
 
         self._kops = kops
         self._backend = backend
-        self._partials = lambda y: kops.fused_partials_batched(
-            x, y, backend=backend)
         self.x = x
         self.n = jnp.asarray(x.shape[1], jnp.int32)
-        self.k = jnp.broadcast_to(
-            jnp.clip(jnp.asarray(k, jnp.int32), 1, x.shape[1]), (x.shape[0],))
+        self.weighted = weights is not None
+        if self.weighted:
+            self.w = w = jnp.broadcast_to(jnp.asarray(weights), x.shape)
+            dt = _weight_accum_dtype(x, w)
+            self.W = jnp.sum(w, axis=1, dtype=dt)
+            self.k = jnp.broadcast_to(
+                jnp.minimum(jnp.asarray(k, dt), self.W), (x.shape[0],))
+            self._partials = lambda y: kops.fused_weighted_partials_batched(
+                x, w, y, backend=backend)
+        else:
+            self.k = jnp.broadcast_to(
+                jnp.clip(jnp.asarray(k, jnp.int32), 1, x.shape[1]),
+                (x.shape[0],))
+            self._partials = lambda y: kops.fused_partials_batched(
+                x, y, backend=backend)
 
-    def __call__(self, y: jax.Array) -> FG:
+    def __call__(self, y: jax.Array):
+        if self.weighted:
+            return wfg_from_partials(self._partials(y), self.W, self.k)
         return fg_from_partials(self._partials(y), self.n, self.k)
 
     def histogram(self, edges):
+        if self.weighted:
+            return self._kops.fused_weighted_histogram_batched(
+                self.x, self.w, edges, backend=self._backend)
         return self._kops.fused_histogram_batched(
             self.x, edges, backend=self._backend)
 
     def init_stats(self):
         x = self.x
+        if self.weighted:
+            # weighted mean: the analytic seed f-values are mass-weighted
+            wmean = jnp.sum(self.w * x, axis=1, dtype=self.W.dtype) \
+                / jnp.maximum(self.W, jnp.ones_like(self.W) * 1e-30)
+            return (jnp.min(x, axis=1), jnp.max(x, axis=1),
+                    wmean.astype(x.dtype))
         return (jnp.min(x, axis=1), jnp.max(x, axis=1),
                 jnp.mean(x, axis=1, dtype=x.dtype))
 
@@ -199,27 +292,48 @@ class SharedEvaluator:
     for all K pivots — K× less HBM traffic than K independent passes.
     """
 
-    def __init__(self, x: jax.Array, ks, *, backend: str | None = None):
+    def __init__(self, x: jax.Array, ks, *, backend: str | None = None,
+                 weights: jax.Array | None = None):
         from repro.kernels import ops as kops  # deferred: core <-> kernels
 
         self._kops = kops
         self._backend = backend
         self.x = x = x.reshape(-1)
-        self._partials = lambda y: kops.fused_partials_multi(
-            x, y, backend=backend)
         self.n = jnp.asarray(x.size, jnp.int32)
-        self.k = jnp.clip(jnp.asarray(ks, jnp.int32).reshape(-1), 1, x.size)
+        self.weighted = weights is not None
+        if self.weighted:
+            self.w = w = jnp.asarray(weights).reshape(-1)
+            dt = _weight_accum_dtype(x, w)
+            self.W = jnp.sum(w, dtype=dt)
+            self.k = jnp.minimum(jnp.asarray(ks, dt).reshape(-1), self.W)
+            self._partials = lambda y: kops.fused_weighted_partials_multi(
+                x, w, y, backend=backend)
+        else:
+            self.k = jnp.clip(jnp.asarray(ks, jnp.int32).reshape(-1), 1,
+                              x.size)
+            self._partials = lambda y: kops.fused_partials_multi(
+                x, y, backend=backend)
 
-    def __call__(self, y: jax.Array) -> FG:
+    def __call__(self, y: jax.Array):
+        if self.weighted:
+            return wfg_from_partials(self._partials(y), self.W, self.k)
         return fg_from_partials(self._partials(y), self.n, self.k)
 
     def histogram(self, edges):
+        if self.weighted:
+            return self._kops.fused_weighted_histogram_multi(
+                self.x, self.w, edges, backend=self._backend)
         return self._kops.fused_histogram_multi(
             self.x, edges, backend=self._backend)
 
     def init_stats(self):
         x, b = self.x, self.k.shape[0]
         bc = lambda v: jnp.broadcast_to(v, (b,))
+        if self.weighted:
+            wmean = jnp.sum(self.w * x, dtype=self.W.dtype) \
+                / jnp.maximum(self.W, 1e-30)
+            return (bc(jnp.min(x)), bc(jnp.max(x)),
+                    bc(wmean.astype(x.dtype)))
         return (bc(jnp.min(x)), bc(jnp.max(x)),
                 bc(jnp.mean(x, dtype=x.dtype)))
 
@@ -233,25 +347,40 @@ class ShardedEvaluator:
     """
 
     def __init__(self, x_local: jax.Array, k, axes, *,
-                 backend: str | None = None):
+                 backend: str | None = None,
+                 weights: jax.Array | None = None):
         from repro.kernels import ops as kops  # deferred: core <-> kernels
 
         self.x_local = x_local = x_local.reshape(-1)
         self.axes = axes = (axes,) if isinstance(axes, str) else tuple(axes)
         self._kops = kops
         self._backend = backend
-        self._partials1 = lambda y: kops.fused_partials(
-            x_local, y, backend=backend)
         self.n = jax.lax.psum(jnp.asarray(x_local.size, jnp.int32), axes)
-        self.k = jnp.clip(jnp.asarray(k, jnp.int32), 1, self.n)
+        self.weighted = weights is not None
+        if self.weighted:
+            self.w_local = w = jnp.asarray(weights).reshape(-1)
+            dt = _weight_accum_dtype(x_local, w)
+            # total mass is a psum, exactly like the element count
+            self.W = jax.lax.psum(jnp.sum(w, dtype=dt), axes)
+            self.k = jnp.minimum(jnp.asarray(k, dt), self.W)
+            self._partials1 = lambda y: kops.fused_weighted_partials(
+                x_local, w, y, backend=backend)
+        else:
+            self.k = jnp.clip(jnp.asarray(k, jnp.int32), 1, self.n)
+            self._partials1 = lambda y: kops.fused_partials(
+                x_local, y, backend=backend)
 
-    def __call__(self, y: jax.Array) -> FG:
+    def __call__(self, y: jax.Array):
         return self.combine(self._partials1(y))
 
     def local_histogram(self, edges):
         """This shard's un-psum'd slot vectors (shape ``(nbins + 2,)``) —
         the binned analogue of :meth:`local_partials`; the distributed
-        binned loop bounds the PER-SHARD in-bracket count from these."""
+        binned loop bounds the PER-SHARD in-bracket count from these.
+        Weighted leg: the ``(cnt, wcnt, wsum)`` triple."""
+        if self.weighted:
+            return self._kops.fused_weighted_histogram(
+                self.x_local, self.w_local, edges, backend=self._backend)
         return self._kops.fused_histogram(
             self.x_local, edges, backend=self._backend)
 
@@ -260,7 +389,13 @@ class ShardedEvaluator:
         the ``(nbins + 2,)`` count vector — additive across shards exactly
         like the FG quadruple (B = 1 view: ``(nbins + 1,)`` edges).  The
         per-bin sums are returned un-psum'd as ``None``: the binned engine
-        never reads them, and psumming them would double the wire bytes."""
+        never reads them, and psumming them would double the wire bytes.
+        Weighted leg: the mass vector psums next to the counts (the wire
+        carries ``2 * (nbins + 2)`` scalars, still no data movement)."""
+        if self.weighted:
+            cnt, wcnt, _wsum = self.local_histogram(edges)
+            return (jax.lax.psum(cnt, self.axes),
+                    jax.lax.psum(wcnt, self.axes), None)
         cnt, _bsum = self.local_histogram(edges)
         return jax.lax.psum(cnt, self.axes), None
 
@@ -270,9 +405,17 @@ class ShardedEvaluator:
         count, see ``distributed.local_order_statistic``)."""
         return self._partials1(y)
 
-    def combine(self, partials) -> FG:
-        """The cross-device combine IS a psum of the four additive partials
-        (the paper's "partial sums from several GPUs are added")."""
+    def combine(self, partials):
+        """The cross-device combine IS a psum of the additive partials
+        (the paper's "partial sums from several GPUs are added") — four
+        for counts, six for the weighted leg."""
+        if self.weighted:
+            wsp, wsn, wlt, wle, lt, le = partials
+            fsum = jax.lax.psum(jnp.stack([wsp, wsn, wlt, wle]), self.axes)
+            csum = jax.lax.psum(jnp.stack([lt, le]), self.axes)
+            return wfg_from_partials(
+                (fsum[0], fsum[1], fsum[2], fsum[3], csum[0], csum[1]),
+                self.W, self.k)
         sp, sn, lt, le = partials
         fsum = jax.lax.psum(jnp.stack([sp, sn]), self.axes)
         csum = jax.lax.psum(jnp.stack([lt, le]), self.axes)
@@ -281,6 +424,13 @@ class ShardedEvaluator:
 
     def init_stats(self):
         x, axes = self.x_local, self.axes
+        if self.weighted:
+            wxsum = jax.lax.psum(
+                jnp.sum(self.w_local * x, dtype=self.W.dtype), axes)
+            wmean = wxsum / jnp.maximum(self.W, 1e-30)
+            return (jax.lax.pmin(jnp.min(x), axes),
+                    jax.lax.pmax(jnp.max(x), axes),
+                    wmean.astype(x.dtype))
         xsum = jax.lax.psum(jnp.sum(x, dtype=x.dtype), axes)
         return (jax.lax.pmin(jnp.min(x), axes),
                 jax.lax.pmax(jnp.max(x), axes),
@@ -295,17 +445,27 @@ class FnEvaluator:
 
     ``histogram(edges) -> (cnt, bsum)`` (edges ``(B, nbins + 1)``, outputs
     ``(B, nbins + 2)``) is optional; without it the evaluator only drives
-    the FG methods."""
+    the FG methods.
+
+    Weighted leg: with ``weights_total=W`` the ``partials`` closure must
+    return the six weighted partials, ``k`` is the target mass ``wk``, and
+    ``histogram`` (if given) the ``(cnt, wcnt, wsum)`` triple — the closure
+    owns whatever transport (psum, multi-leaf reduction) produces them."""
 
     def __init__(self, partials: Callable, n, k, init_stats: Callable,
-                 histogram: Optional[Callable] = None):
+                 histogram: Optional[Callable] = None,
+                 weights_total=None):
         self._partials = partials
         self.n = n
         self.k = k
         self._init_stats = init_stats
         self._histogram = histogram
+        self.weighted = weights_total is not None
+        self.W = weights_total
 
-    def __call__(self, y: jax.Array) -> FG:
+    def __call__(self, y: jax.Array):
+        if self.weighted:
+            return wfg_from_partials(self._partials(y), self.W, self.k)
         return fg_from_partials(self._partials(y), self.n, self.k)
 
     def histogram(self, edges):

@@ -80,9 +80,11 @@ import jax.numpy as jnp
 
 from repro.core.objective import (
     FG,
+    WFG,
     Evaluator,
     RowsEvaluator,
     SharedEvaluator,
+    _weight_accum_dtype,
     os_weights,
 )
 from repro.core import transforms
@@ -797,6 +799,524 @@ def quantiles(x: jax.Array, qs, **kw) -> SelectResult:
     n = x.size
     ks = jnp.clip(jnp.ceil(jnp.asarray(qs) * n).astype(jnp.int32), 1, n)
     return multi_order_statistic(x, ks, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Weighted selection: counts generalized to weight mass
+# ---------------------------------------------------------------------------
+#
+# The weighted k-th order statistic is the smallest element ``v`` whose
+# cumulative weight ``W_le(v) = sum(w_i : x_i <= v)`` reaches the target
+# mass ``wk`` — the minimizer of F_w(y) = sum_i w_i * rho(x_i - y) (see
+# ``objective.py``).  The engine shape is IDENTICAL to the unweighted one:
+#
+# * the bracket loop's move/exact decisions compare weight MASSES against
+#   ``wk`` (``W_lt < wk <= W_le`` is the element-hit certificate — it forces
+#   positive mass AT the pivot, so a certified pivot is a data element);
+# * the binned descent narrows against the cumulative-mass vector through
+#   the SAME :func:`binned_descent_step` (its comparisons are ordering-only,
+#   so integer counts and float masses take the same code path, and the
+#   fail-safe gates — violated invariant => stall, never EXACT_HIT — carry
+#   over to the weighted regime verbatim);
+# * the survivor-compaction finalize resolves the exact answer among <= cap
+#   survivors via SORTED PREFIX WEIGHTS: compact (value, weight) pairs,
+#   sort by value, and pick the first prefix whose mass (on top of the
+#   below-bracket mass) reaches ``wk``;
+# * INTEGER element counts still ride the state: buffer capacity is a
+#   count, so the cap-based stopping rule is unchanged.
+#
+# Uniform weights w_i == 1 with wk = k make every mass comparison an exact
+# integer comparison, reproducing the unweighted decisions bit for bit.
+#
+# Exactness caveat (inherent to weighted selection in fp): weight masses
+# accumulate in floating point, so when a cumulative mass lands within
+# rounding distance of ``wk`` the <-vs-<= outcome depends on summation
+# order.  With exactly-summable weights (integers, dyadic rationals with
+# bounded total — incl. the uniform case) every comparison is exact and the
+# result is bit-identical to the sorted-cumsum oracle; otherwise the result
+# is still an element of ``x`` whose measured invariant certifies it, within
+# one mass-rounding of the oracle's choice.  The late-sweep ``hit_lo``
+# binned certificate is additionally demoted to a stall (only the first
+# sweep can pin ``x_(wk) = xmin``): with inexact masses an ulp-flip could
+# otherwise mint a non-element edge value.
+
+
+def _seed_state_weighted(ev, found0, t0):
+    """Weighted analogue of :func:`_seed_state`.
+
+    The cut seeds use the mass-normalized coefficients ``alpha = (W - wk)/W``
+    and ``beta = wk/W`` (zero-crossing exactly at mass ``wk``) and the
+    conservative extreme slopes ``-wk/W`` / ``(W - wk)/W`` (no mass assumed
+    at the extremes — flatter than the truth, so the support lines stay
+    lower bounds).  ``f`` seeds anchor on the weighted mean.
+    """
+    xmin, xmax, wmean = ev.init_stats()
+    wk = ev.k
+    shape = jnp.broadcast_shapes(jnp.shape(xmin), jnp.shape(wk))
+    dtype = xmin.dtype
+    Wf = jnp.broadcast_to(jnp.asarray(ev.W, wk.dtype), shape)
+    wkk = jnp.broadcast_to(wk, shape)
+    bc = lambda v: jnp.broadcast_to(jnp.asarray(v, dtype), shape)
+
+    xmin, xmax, wmean = bc(xmin), bc(xmax), bc(wmean)
+    Wsafe = jnp.maximum(Wf, jnp.asarray(1e-30, Wf.dtype))
+    alpha = ((Wf - wkk) / Wsafe).astype(dtype)
+    beta = (wkk / Wsafe).astype(dtype)
+    fL0 = beta * (wmean - xmin)
+    fR0 = alpha * (xmax - wmean)
+    gL0 = -beta
+    gR0 = alpha
+
+    if found0 is None:
+        found0 = jnp.zeros(shape, bool)
+    if t0 is None:
+        t0 = jnp.full(shape, jnp.nan, dtype)
+    s0 = BatchState(
+        yL=xmin, fL=fL0, gL=gL0,
+        yR=xmax, fR=fR0, gR=gR0,
+        cleL=jnp.ones(shape, jnp.int32),   # count(x<=min) >= 1 (conservative)
+        cleR=jnp.broadcast_to(jnp.asarray(ev.n, jnp.int32), shape),
+        t_exact=t0,
+        found_exact=jnp.broadcast_to(found0, shape),
+        iters=jnp.zeros(shape, jnp.int32),
+        it=jnp.asarray(0, jnp.int32),
+        tp=0.5 * (xmin + xmax), fp=jnp.maximum(fL0, fR0),
+    )
+    return s0, xmin, xmax, wkk, dtype
+
+
+def weighted_bracket_loop_batched(
+    ev,
+    *,
+    method: str = "cp",
+    maxit: int = 64,
+    cap=0,
+    found0: Optional[jax.Array] = None,
+    t0: Optional[jax.Array] = None,
+):
+    """Weighted bracket-shrinking loop: :func:`bracket_loop_batched` with the
+    move/exact decisions on weight masses.
+
+    ``ev`` must be a weighted evaluator (``ev(y) -> WFG``, ``ev.k`` = target
+    masses, ``ev.W`` = total mass).  The state is the shared
+    :class:`BatchState`; ``cleL``/``cleR`` keep carrying INTEGER counts (the
+    cap-based stopping rule bounds the compaction buffer, which is sized in
+    elements, not mass).
+    """
+    propose = _PROPOSALS[method]
+    s0, xmin, xmax, wkk, dtype = _seed_state_weighted(ev, found0, t0)
+
+    def cond(s: BatchState):
+        return (s.it < maxit) & jnp.any(_live(s, cap))
+
+    def body(s: BatchState):
+        lv = _live(s, cap)
+        t = propose(s)
+        bad = ~jnp.isfinite(t) | (t <= s.yL) | (t >= s.yR)
+        t = jnp.where(bad, 0.5 * (s.yL + s.yR), t).astype(dtype)
+        wfg: WFG = ev(t)
+        # mass invariant replaces the count invariant: W_lt < wk <= W_le
+        # certifies t == the weighted order statistic (positive mass at t)
+        exact = (wfg.w_lt < wkk) & (wkk <= wfg.w_le) & lv
+        move_left = (wfg.w_le < wkk) & lv   # == (g_hi < 0)
+        move_right = lv & ~move_left & ~exact  # then W_lt >= wk
+        return BatchState(
+            yL=jnp.where(move_left, t, s.yL),
+            fL=jnp.where(move_left, wfg.f, s.fL),
+            gL=jnp.where(move_left, wfg.g_hi, s.gL),
+            yR=jnp.where(move_right, t, s.yR),
+            fR=jnp.where(move_right, wfg.f, s.fR),
+            gR=jnp.where(move_right, wfg.g_lo, s.gR),
+            cleL=jnp.where(move_left, wfg.n_le, s.cleL),
+            cleR=jnp.where(move_right, wfg.n_le, s.cleR),
+            t_exact=jnp.where(exact, t, s.t_exact),
+            found_exact=s.found_exact | exact,
+            iters=s.iters + lv.astype(jnp.int32),
+            it=s.it + 1,
+            tp=jnp.where(lv, t, s.tp), fp=jnp.where(lv, wfg.f, s.fp),
+        )
+
+    return jax.lax.while_loop(cond, body, s0), xmin, xmax
+
+
+def weighted_binned_loop_batched(
+    ev,
+    *,
+    nbins: int = DEF_NBINS,
+    maxit: int = 16,
+    cap=0,
+    found0: Optional[jax.Array] = None,
+    t0: Optional[jax.Array] = None,
+):
+    """Weighted histogram bracket descent (phase 1 of weighted 'binned').
+
+    Each sweep histograms the live brackets ONCE — the weighted pass emits
+    the per-slot ``(count, mass)`` pair — and narrows every row to the
+    single bin whose cumulative MASS straddles that row's target ``wk``,
+    through the same :func:`binned_descent_step` as the unweighted engine
+    (its comparisons are ordering-only; float masses and integer counts
+    take the same code path, so the fail-safe certificate gates carry
+    over).  Integer prefix counts at the chosen edges keep feeding the
+    cap-based stopping rule.
+
+    The first-sweep ``hit_lo`` certificate pins ``xmin`` exactly as in the
+    unweighted loop; on LATER sweeps ``hit_lo`` is demoted to a stall (in
+    exact arithmetic the invariant mass(x <= yL) < wk forbids it, so a
+    late fire can only be an inexact-mass ulp-flip — the fail-safe answer
+    is the finalize's fallback chain, never a minted edge value).
+    """
+    from repro.kernels.ref import bin_edges  # deferred: core <-> kernels
+
+    s0, xmin, xmax, wkk, dtype = _seed_state_weighted(ev, found0, t0)
+    dt = jnp.promote_types(dtype, jnp.float32)
+    s0 = s0._replace(yL=s0.yL.astype(dt), yR=s0.yR.astype(dt),
+                     t_exact=s0.t_exact.astype(dt))
+    stalled0 = jnp.zeros(s0.found_exact.shape, bool)
+
+    def live(s, stalled):
+        return _live(s, cap) & ~stalled
+
+    def cond(carry):
+        s, stalled = carry
+        return (s.it < maxit) & jnp.any(live(s, stalled))
+
+    def body(carry):
+        s, stalled = carry
+        lv = live(s, stalled)
+        edges = bin_edges(s.yL, s.yR, nbins)
+        cnt, wcnt, _wsum = ev.histogram(edges)
+        # cumulative MASS at the realized edges drives the narrowing
+        cumw = jnp.cumsum(wcnt[..., :-1], axis=-1)
+        yLn, yRn, _, _, jm1, jstar, hit_lo, exact, stall = \
+            binned_descent_step(cumw, edges, s.yL, s.yR, wkk)
+        # integer prefix counts at the same edges feed the cap rule
+        cumn = jnp.cumsum(cnt[..., :-1], axis=-1)
+        take = lambda a, i: jnp.take_along_axis(
+            a, i[..., None], axis=-1)[..., 0]
+        cLn, cRn = take(cumn, jm1), take(cumn, jstar)
+        # late hit_lo can only be an inexact-mass ulp-flip: fail safe
+        late_hit_lo = hit_lo & (s.it > 0)
+        exact = lv & exact & ~late_hit_lo
+        t_ex = jnp.where(hit_lo, s.yL, yRn)
+        stall_n = lv & (stall | late_hit_lo)
+        upd = lv & ~exact & ~stall_n
+        s = s._replace(
+            yL=jnp.where(upd, yLn, s.yL),
+            yR=jnp.where(upd, yRn, s.yR),
+            cleL=jnp.where(upd, cLn, s.cleL),
+            cleR=jnp.where(upd, cRn, s.cleR),
+            t_exact=jnp.where(exact, t_ex, s.t_exact),
+            found_exact=s.found_exact | exact,
+            iters=s.iters + lv.astype(jnp.int32),
+            it=s.it + 1,
+        )
+        return s, stalled | stall_n
+
+    s, _ = jax.lax.while_loop(cond, body, (s0, stalled0))
+    return s, xmin, xmax
+
+
+def _run_weighted_bracket_phase(ev, method, maxit, cap, nbins):
+    """Dispatch the weighted phase-1 loop for a resolved method."""
+    if method == "binned":
+        return weighted_binned_loop_batched(ev, nbins=nbins, maxit=maxit,
+                                            cap=cap)
+    return weighted_bracket_loop_batched(ev, method=method, maxit=maxit,
+                                         cap=cap)
+
+
+def _compact_interval_weighted(x, w, yL, yR, cap):
+    """ONE problem's weighted survivor compaction (1-D ``x``/``w``).
+
+    Like :func:`_compact_interval`, but the (value, weight) PAIRS land in
+    aligned ``(cap,)`` buffers (trash slot ``cap``; pad values +inf, pad
+    weights 0 so sorted prefix masses are unaffected), and the certificates
+    are masses: ``cLw = mass(x <= yL)``, the next distinct value above
+    ``yL`` with its inclusive mass (weighted tie-fallback verification).
+    """
+    big = jnp.asarray(jnp.inf, x.dtype)
+    dtw = w.dtype
+    mask_in = (x > yL) & (x <= yR)
+    cL = jnp.sum(x <= yL, dtype=jnp.int32)
+    cLw = jnp.sum(jnp.where(x <= yL, w, 0), dtype=dtw)
+    n_in = jnp.sum(mask_in, dtype=jnp.int32)
+    pos = jnp.cumsum(mask_in.astype(jnp.int32)) - 1
+    idx = jnp.where(mask_in, jnp.minimum(pos, cap), cap)
+    z = jnp.full((cap + 1,), big, x.dtype).at[idx].set(
+        jnp.where(mask_in, x, big))
+    zw = jnp.zeros((cap + 1,), dtw).at[idx].set(
+        jnp.where(mask_in, w, 0))
+    vnext = jnp.min(jnp.where(x > yL, x, big))
+    w_le_v = jnp.sum(jnp.where(x <= vnext, w, 0), dtype=dtw)
+    return z[:cap], zw[:cap], cL, cLw, n_in, vnext, w_le_v
+
+
+def _assemble_answers_weighted(wkk, s: BatchState, cap, zs, zws, cLw, n_in,
+                               vnext, w_le_v, w_lt_max, xmin,
+                               xmax) -> SelectResult:
+    """Weighted answer/status cascade: sorted-prefix-weight resolution.
+
+    ``zs`` is the value-sorted ``(B, cap)`` survivor buffer, ``zws`` the
+    aligned weights.  The in-buffer answer is the first survivor whose
+    cumulative mass (on top of the below-bracket mass ``cLw``) reaches
+    ``wk`` — the weighted generalization of indexing at ``k - cL``.
+    """
+    cumw = cLw[..., None] + jnp.cumsum(zws, axis=-1)
+    reach = cumw >= wkk[..., None]
+    sidx = jnp.argmax(reach, axis=-1).astype(jnp.int32)
+    ans_sort = jnp.take_along_axis(zs, sidx[..., None], axis=-1)[..., 0]
+    # the buffer certifies only when it holds every survivor AND its total
+    # mass actually reaches wk (argmax over all-False must not certify)
+    sort_ok = (n_in <= cap) & reach[..., -1]
+    fallback_ok = (cLw < wkk) & (wkk <= w_le_v)
+
+    value = jnp.where(
+        s.found_exact,
+        s.t_exact,
+        jnp.where(sort_ok, ans_sort,
+                  jnp.where(fallback_ok, vnext, s.yR)),
+    )
+    status = jnp.where(
+        s.found_exact,
+        EXACT_HIT,
+        jnp.where(
+            sort_ok,
+            HYBRID_SORT,
+            jnp.where(fallback_ok, TIE_FALLBACK, NOT_CONVERGED),
+        ),
+    )
+    # Weighted extreme shortcuts: mass(x <= y_L) >= wk can only mean the
+    # answer sits at or below y_L, which the invariant pins to the minimum;
+    # symmetric test at the maximum (mass strictly below the max < wk).
+    # Unlike the exact-count unweighted shortcuts, the masses here are
+    # RE-MEASURED by a differently-ordered sum than the loop's histogram
+    # psums, so a rounding flip near wk could fire them with the bracket
+    # far from the extreme — gate on the only state the exact-arithmetic
+    # invariant permits (bracket ends still AT the extremes); a gated-out
+    # flip falls through to the sort/fallback chain (fail safe).
+    at_min = (cLw >= wkk) & (s.yL == xmin)
+    at_max = (w_lt_max < wkk) & (s.yR == xmax)
+    value = jnp.where(at_min, xmin, jnp.where(at_max, xmax, value))
+    status = jnp.where(at_min | at_max, EXACT_HIT, status)
+    return SelectResult(
+        value=value, iters=s.iters, status=status.astype(jnp.int32),
+        y_lo=s.yL, y_hi=s.yR, n_in=n_in,
+    )
+
+
+def _finalize_rows_weighted(x, w, wkk, s: BatchState, cap, xmin,
+                            xmax) -> SelectResult:
+    """Weighted per-row exact recovery: compact (value, weight) pairs, one
+    batched value-sort carrying the weights, sorted-prefix-mass answer."""
+    z, zw, _cL, cLw, n_in, vnext, w_le_v = jax.vmap(
+        lambda xi, wi, lo, hi: _compact_interval_weighted(xi, wi, lo, hi,
+                                                          cap)
+    )(x, w, s.yL, s.yR)
+    order = jnp.argsort(z, axis=-1)
+    zs = jnp.take_along_axis(z, order, axis=-1)
+    zws = jnp.take_along_axis(zw, order, axis=-1)
+    w_lt_max = jnp.sum(jnp.where(x < xmax[:, None], w, 0), axis=1,
+                       dtype=w.dtype)
+    return _assemble_answers_weighted(wkk, s, cap, zs, zws, cLw, n_in,
+                                      vnext, w_le_v, w_lt_max, xmin, xmax)
+
+
+def _finalize_shared_weighted(x, w, wkk, s: BatchState, cap, xmin,
+                              xmax) -> SelectResult:
+    """Shared-x weighted finalize: per-pivot compaction via ``lax.map``
+    against the ONE ``(n,)`` array pair — O(n + K*cap) memory, exactly like
+    the unweighted shared finalize."""
+    x = x.reshape(-1)
+    w = w.reshape(-1)
+    z, zw, _cL, cLw, n_in, vnext, w_le_v = jax.lax.map(
+        lambda args: _compact_interval_weighted(x, w, args[0], args[1], cap),
+        (s.yL, s.yR))
+    order = jnp.argsort(z, axis=-1)
+    zs = jnp.take_along_axis(z, order, axis=-1)
+    zws = jnp.take_along_axis(zw, order, axis=-1)
+    w_lt_max = jnp.broadcast_to(
+        jnp.sum(jnp.where(x < jnp.max(xmax), w, 0), dtype=w.dtype),
+        wkk.shape)
+    return _assemble_answers_weighted(wkk, s, cap, zs, zws, cLw, n_in,
+                                      vnext, w_le_v, w_lt_max, xmin, xmax)
+
+
+def _weighted_sort_cumsum(xs, cumw, wkk):
+    """Answer/validity of the full-sort baseline: first sorted value whose
+    cumulative mass reaches the target."""
+    reach = cumw >= wkk[..., None]
+    idx = jnp.argmax(reach, axis=-1).astype(jnp.int32)
+    value = jnp.take_along_axis(xs, idx[..., None], axis=-1)[..., 0]
+    # nothing reaches wk (all-False argmax): the target mass exceeds the
+    # measured total — take the maximum, the limit of the definition
+    value = jnp.where(reach[..., -1], value, xs[..., -1])
+    return value
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("method", "maxit", "cap", "backend", "nbins"),
+)
+def weighted_select_rows(
+    x: jax.Array,
+    w: jax.Array,
+    wk,
+    *,
+    method: Optional[str] = None,
+    maxit: int = 64,
+    cap: Optional[int] = None,
+    backend: Optional[str] = None,
+    nbins: int = DEF_NBINS,
+) -> SelectResult:
+    """Rows-mode weighted selection: ``x``/``w`` (B, n), ``wk`` scalar or
+    (B,) target cumulative weights.
+
+    Row ``i`` returns the smallest element ``v`` of ``x[i]`` with
+    ``sum(w[i, x[i] <= v]) >= wk[i]`` (``wk`` is clipped to the row's total
+    mass).  Weights must be non-negative; uniform weights with ``wk = k``
+    reproduce :func:`select_rows` exactly.  ``method`` as in
+    :func:`select_rows` minus ``transform`` support; ``'sort'`` is the
+    weighted sort-cumsum baseline.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"weighted_select_rows wants (B, n) data, got "
+                         f"{x.shape}")
+    b, n = x.shape
+    w = jnp.broadcast_to(jnp.asarray(w), x.shape)
+    method = _resolve_method(method, n, backend)
+    if cap is None:
+        cap = _default_cap_rows(n)
+    cap = min(cap, n)
+    ev = RowsEvaluator(x, wk, backend=backend, weights=w)
+    wkk = ev.k  # clipped target masses, accumulation dtype, (B,)
+
+    if method == "sort":
+        order = jnp.argsort(x, axis=1)
+        xs = jnp.take_along_axis(x, order, axis=1)
+        ws = jnp.take_along_axis(w.astype(wkk.dtype), order, axis=1)
+        value = _weighted_sort_cumsum(xs, jnp.cumsum(ws, axis=1), wkk)
+        zero = jnp.zeros((b,), jnp.int32)
+        return SelectResult(
+            value=value, iters=zero,
+            status=jnp.full((b,), EXACT_HIT, jnp.int32),
+            y_lo=xs[:, 0], y_hi=xs[:, -1],
+            n_in=jnp.full((b,), n, jnp.int32),
+        )
+
+    s, xmin, xmax = _run_weighted_bracket_phase(ev, method, maxit, cap,
+                                                nbins)
+    return _finalize_rows_weighted(x, w.astype(wkk.dtype), wkk, s, cap,
+                                   xmin, xmax)
+
+
+def weighted_order_statistic(
+    x: jax.Array,
+    w: jax.Array,
+    wk,
+    *,
+    method: Optional[str] = None,
+    maxit: int = 64,
+    cap: Optional[int] = None,
+    backend: Optional[str] = None,
+    nbins: int = DEF_NBINS,
+) -> SelectResult:
+    """Smallest element of ``x`` whose cumulative weight reaches ``wk``.
+
+    The B = 1 view of :func:`weighted_select_rows`.  With ``w = ones`` and
+    ``wk = k`` this is exactly :func:`order_statistic`.
+    """
+    x = x.reshape(-1)
+    if cap is None:
+        cap = _default_cap(x.size)  # scalar policy: one generous buffer
+    res = weighted_select_rows(
+        x[None, :], jnp.asarray(w).reshape(1, -1),
+        jnp.asarray(wk).reshape(1),
+        method=method, maxit=maxit, cap=cap, backend=backend, nbins=nbins,
+    )
+    return jax.tree.map(lambda a: a[0], res)
+
+
+def _total_mass(x, w):
+    """Total weight at the mass-accumulation dtype (the wk/W reference)."""
+    return jnp.sum(w, dtype=_weight_accum_dtype(jnp.asarray(x), w))
+
+
+def weighted_median(x: jax.Array, w: jax.Array, **kw) -> SelectResult:
+    """Lower weighted median: smallest v with ``mass(x <= v) >= W/2``.
+
+    Uniform weights reproduce :func:`median` (= x_([(n+1)/2])) exactly.
+    """
+    w = jnp.asarray(w).reshape(-1)
+    return weighted_order_statistic(x, w, 0.5 * _total_mass(x, w), **kw)
+
+
+def weighted_quantile(x: jax.Array, w: jax.Array, q, **kw) -> SelectResult:
+    """Lower weighted q-quantile: smallest v with ``mass(x <= v) >= q*W``."""
+    w = jnp.asarray(w).reshape(-1)
+    W = _total_mass(x, w)
+    return weighted_order_statistic(x, w, jnp.asarray(q, W.dtype) * W, **kw)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("method", "maxit", "cap", "backend", "nbins"),
+)
+def weighted_multi_order_statistic(
+    x: jax.Array,
+    w: jax.Array,
+    wks,
+    *,
+    method: Optional[str] = None,
+    maxit: int = 64,
+    cap: Optional[int] = None,
+    backend: Optional[str] = None,
+    nbins: int = DEF_NBINS,
+) -> SelectResult:
+    """Several weighted order statistics of the SAME array at once.
+
+    Shared-x mode: all K target masses iterate together against the
+    weighted multi-pivot kernels (each x/w tile read once per sweep for
+    every live bracket), exactly like :func:`multi_order_statistic`.
+    """
+    x = x.reshape(-1)
+    n = x.size
+    w = jnp.broadcast_to(jnp.asarray(w).reshape(-1), x.shape)
+    method = _resolve_method(method, n, backend)
+    if cap is None:
+        cap = _default_cap_rows(n)
+    cap = min(cap, n)
+    ev = SharedEvaluator(x, wks, backend=backend, weights=w)
+    wkk = ev.k
+    nk = wkk.shape[0]
+
+    if method == "sort":
+        order = jnp.argsort(x)
+        xs = x[order]
+        cumw = jnp.cumsum(w.astype(wkk.dtype)[order])
+        value = _weighted_sort_cumsum(xs[None, :], cumw[None, :],
+                                      wkk)  # broadcast over K targets
+        zero = jnp.zeros((nk,), jnp.int32)
+        return SelectResult(
+            value=value, iters=zero,
+            status=jnp.full((nk,), EXACT_HIT, jnp.int32),
+            y_lo=jnp.broadcast_to(xs[0], (nk,)),
+            y_hi=jnp.broadcast_to(xs[-1], (nk,)),
+            n_in=jnp.full((nk,), n, jnp.int32),
+        )
+
+    s, xmin, xmax = _run_weighted_bracket_phase(ev, method, maxit, cap,
+                                                nbins)
+    return _finalize_shared_weighted(x, w.astype(wkk.dtype), wkk, s, cap,
+                                     xmin, xmax)
+
+
+def weighted_quantiles(x: jax.Array, w: jax.Array, qs, **kw) -> SelectResult:
+    """Lower weighted quantiles at each q in ``qs`` (one shared-x solve)."""
+    x = jnp.asarray(x).reshape(-1)
+    w = jnp.asarray(w).reshape(-1)
+    W = _total_mass(x, w)
+    wks = jnp.asarray(qs, W.dtype).reshape(-1) * W
+    return weighted_multi_order_statistic(x, w, wks, **kw)
 
 
 # ---------------------------------------------------------------------------

@@ -252,6 +252,217 @@ def cp_partials_batched(
 
 
 # ---------------------------------------------------------------------------
+# Weighted selection objective: fused weighted partials
+# ---------------------------------------------------------------------------
+#
+# The weighted generalization F_w(y) = sum_i w_i * rho(x_i - y) (whose
+# minimizer is the weighted order statistic — the primitive behind weighted
+# medians in Theil-Sen and IRLS reweighting) needs SIX additive partials per
+# pivot instead of four:
+#
+#     (wsum_pos, wsum_neg)   f32   sum of w*(x-y)+ / w*(y-x)+
+#     (w_lt, w_le)           f32   weight MASS below / at-or-below the pivot
+#     (n_lt, n_le)           i32   element COUNTS (drive the cap-based
+#                                  stopping rule — buffer capacity is a
+#                                  count, not a mass)
+#
+# All six are additive over blocks/shards, so the multi-device combine stays
+# a psum, exactly like the unweighted quadruple.  Weights ride the same tile
+# layout as x (padded tail masked by the global element index; padded weight
+# lanes contribute nothing because the mask gates every accumulation).
+
+
+def _wpartials_tile(x, w, valid, y):
+    """Per-tile weighted partials for one pivot: six accumulators."""
+    d = x - y
+    zero = jnp.zeros_like(x)
+    wsp = jnp.sum(jnp.where(valid & (d > 0), w * d, zero))
+    wsn = jnp.sum(jnp.where(valid & (d < 0), -w * d, zero))
+    wlt = jnp.sum(jnp.where(valid & (d < 0), w, zero))
+    wle = jnp.sum(jnp.where(valid & (d <= 0), w, zero))
+    nlt = jnp.sum(jnp.where(valid & (d < 0), 1, 0).astype(jnp.int32))
+    nle = jnp.sum(jnp.where(valid & (d <= 0), 1, 0).astype(jnp.int32))
+    return wsp, wsn, wlt, wle, nlt, nle
+
+
+def _wpartials_kernel(y_ref, x_ref, w_ref, fsum_ref, cnt_ref, *, n,
+                      block_rows):
+    b = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)  # (block_rows, LANES)
+    w = w_ref[...].astype(jnp.float32)
+    valid = _valid_mask(b, x.shape, n, block_rows)
+    wsp, wsn, wlt, wle, nlt, nle = _wpartials_tile(x, w, valid, y_ref[0])
+    fsum_ref[0, 0] = wsp
+    fsum_ref[0, 1] = wsn
+    fsum_ref[0, 2] = wlt
+    fsum_ref[0, 3] = wle
+    cnt_ref[0, 0] = nlt
+    cnt_ref[0, 1] = nle
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def wcp_partials(
+    x: jax.Array,
+    w: jax.Array,
+    y: jax.Array,
+    *,
+    block_rows: int = DEF_BLOCK_ROWS,
+    interpret: bool = False,
+):
+    """Weighted fused partials: ``x``/``w`` (n,), scalar pivot ``y``.
+
+    Returns ``(wsum_pos, wsum_neg, w_lt, w_le, n_lt, n_le)`` scalars; count
+    terms bit-identical to ``kernels.ref.wcp_partials_ref``.
+    """
+    n = x.size
+    x2, nblocks = _pad_to_tiles(x.reshape(-1), block_rows)
+    w2, _ = _pad_to_tiles(w.reshape(-1), block_rows)
+    y = jnp.asarray(y, jnp.float32).reshape(1)
+
+    fsum, cnt = pl.pallas_call(
+        functools.partial(_wpartials_kernel, n=n, block_rows=block_rows),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # y: tiny, whole-array
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 4), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, 4), jnp.float32),
+            jax.ShapeDtypeStruct((nblocks, 2), jnp.int32),
+        ],
+        interpret=interpret,
+    )(y, x2, w2)
+    s = jnp.sum(fsum, axis=0)
+    c = jnp.sum(cnt, axis=0)
+    return s[0], s[1], s[2], s[3], c[0], c[1]
+
+
+def _wbatched_kernel(y_ref, x_ref, w_ref, fsum_ref, cnt_ref, *, n,
+                     block_rows):
+    r = pl.program_id(0)  # problem row
+    b = pl.program_id(1)  # block within the row
+    x = x_ref[0].astype(jnp.float32)  # (block_rows, LANES)
+    w = w_ref[0].astype(jnp.float32)
+    valid = _valid_mask(b, x.shape, n, block_rows)
+    wsp, wsn, wlt, wle, nlt, nle = _wpartials_tile(x, w, valid, y_ref[r])
+    fsum_ref[0, 0, 0] = wsp
+    fsum_ref[0, 0, 1] = wsn
+    fsum_ref[0, 0, 2] = wlt
+    fsum_ref[0, 0, 3] = wle
+    cnt_ref[0, 0, 0] = nlt
+    cnt_ref[0, 0, 1] = nle
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def wcp_partials_batched(
+    x: jax.Array,
+    w: jax.Array,
+    y: jax.Array,
+    *,
+    block_rows: int = DEF_BLOCK_ROWS,
+    interpret: bool = False,
+):
+    """Row-wise weighted partials: ``x``/``w`` (B, n), ``y`` (B,) pivots.
+
+    Returns six (B,) vectors ``(wsum_pos, wsum_neg, w_lt, w_le, n_lt,
+    n_le)``.
+    """
+    bsz, n = x.shape
+    x3, nblocks = _pad_to_tiles(x, block_rows)
+    w3, _ = _pad_to_tiles(w, block_rows)
+    y = jnp.asarray(y, jnp.float32).reshape(bsz)
+
+    fsum, cnt = pl.pallas_call(
+        functools.partial(_wbatched_kernel, n=n, block_rows=block_rows),
+        grid=(bsz, nblocks),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((1, block_rows, LANES), lambda r, b: (r, b, 0)),
+            pl.BlockSpec((1, block_rows, LANES), lambda r, b: (r, b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 4), lambda r, b: (r, b, 0)),
+            pl.BlockSpec((1, 1, 2), lambda r, b: (r, b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, nblocks, 4), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, nblocks, 2), jnp.int32),
+        ],
+        interpret=interpret,
+    )(y, x3, w3)
+    s = jnp.sum(fsum, axis=1)
+    c = jnp.sum(cnt, axis=1)
+    return (s[..., 0], s[..., 1], s[..., 2], s[..., 3],
+            c[..., 0], c[..., 1])
+
+
+def _wmulti_kernel(y_ref, x_ref, w_ref, fsum_ref, cnt_ref, *, n, npiv,
+                   block_rows):
+    """One x/w tile pair, ALL K pivots — same VMEM-residency win as the
+    unweighted multi kernel (K is static, the pivot loop unrolls)."""
+    b = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)  # (block_rows, LANES)
+    w = w_ref[...].astype(jnp.float32)
+    valid = _valid_mask(b, x.shape, n, block_rows)
+    for j in range(npiv):  # static unroll
+        wsp, wsn, wlt, wle, nlt, nle = _wpartials_tile(x, w, valid, y_ref[j])
+        fsum_ref[0, j, 0] = wsp
+        fsum_ref[0, j, 1] = wsn
+        fsum_ref[0, j, 2] = wlt
+        fsum_ref[0, j, 3] = wle
+        cnt_ref[0, j, 0] = nlt
+        cnt_ref[0, j, 1] = nle
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def wcp_partials_multi(
+    x: jax.Array,
+    w: jax.Array,
+    y: jax.Array,
+    *,
+    block_rows: int = DEF_BLOCK_ROWS,
+    interpret: bool = False,
+):
+    """Shared-x weighted multi-pivot partials: ``x``/``w`` (n,), ``y`` (K,).
+
+    Returns six (K,) vectors.
+    """
+    n = x.size
+    npiv = y.shape[0]
+    x2, nblocks = _pad_to_tiles(x.reshape(-1), block_rows)
+    w2, _ = _pad_to_tiles(w.reshape(-1), block_rows)
+    y = jnp.asarray(y, jnp.float32).reshape(npiv)
+
+    fsum, cnt = pl.pallas_call(
+        functools.partial(_wmulti_kernel, n=n, npiv=npiv,
+                          block_rows=block_rows),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, npiv, 4), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, npiv, 2), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, npiv, 4), jnp.float32),
+            jax.ShapeDtypeStruct((nblocks, npiv, 2), jnp.int32),
+        ],
+        interpret=interpret,
+    )(y, x2, w2)
+    s = jnp.sum(fsum, axis=0)
+    c = jnp.sum(cnt, axis=0)
+    return s[:, 0], s[:, 1], s[:, 2], s[:, 3], c[:, 0], c[:, 1]
+
+
+# ---------------------------------------------------------------------------
 # Binned bracket descent: multi-bin histogram kernels
 # ---------------------------------------------------------------------------
 #
@@ -462,3 +673,215 @@ def cp_histogram_multi(
         interpret=interpret,
     )(y, x2)
     return jnp.sum(cnt, axis=0), jnp.sum(bsum, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Weighted histogram kernels: per-slot weight MASS next to the counts
+# ---------------------------------------------------------------------------
+#
+# The weighted binned descent narrows against a target cumulative weight W_k,
+# so each sweep needs the per-slot weight mass sum(w_i : x_i in slot) next to
+# the integer count (the count still drives the cap-based stopping rule and
+# certifies sum(cnt) == n).  Per slot the kernels emit
+#
+#     cnt    i32   element count          (exactness bookkeeping, cap rule)
+#     wcnt   f32   sum of w_i             (the narrowing signal)
+#     wsum   f32   sum of w_i * x_i       (CP-polish ingredient, additive)
+#
+# all additive across blocks/shards — the distributed combine psums the
+# (nbins + 2,) mass vector exactly like the unweighted count vector.  The
+# EXACTNESS CONTRACT is unchanged: realized edges come from the engine via
+# ``kernels.ref.bin_edges`` and are only COMPARED against.
+
+
+def _wbin_tile(x, w, valid, lower, upper):
+    """Per-tile weighted slot partials for one bracket.
+
+    Returns ``(cnt, wcnt, wsum)`` of shape ``(nbins + 2,)``; same one-hot
+    membership (and VMEM sizing) as :func:`_bin_tile`.
+    """
+    nslots = lower.shape[-1]
+    j = jax.lax.broadcasted_iota(jnp.int32, (1, 1, nslots), 2)
+    lo3 = lower.reshape(1, 1, nslots)
+    up3 = upper.reshape(1, 1, nslots)
+    x3 = x[:, :, None]
+    w3 = w[:, :, None]
+    # slot 0 escapes the strict lower test (x == -inf), as in _bin_tile
+    m = valid[:, :, None] & ((x3 > lo3) | (j == 0)) & (x3 <= up3)
+    cnt = jnp.sum(m.astype(jnp.int32), axis=(0, 1))
+    wcnt = jnp.sum(jnp.where(m, w3, jnp.float32(0.0)), axis=(0, 1))
+    wsum = jnp.sum(jnp.where(m, w3 * x3, jnp.float32(0.0)), axis=(0, 1))
+    return cnt, wcnt, wsum
+
+
+def _whistogram_kernel(y_ref, x_ref, w_ref, cnt_ref, wcnt_ref, sum_ref, *,
+                       n, block_rows):
+    b = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)  # (block_rows, LANES)
+    w = w_ref[...].astype(jnp.float32)
+    valid = _valid_mask(b, x.shape, n, block_rows)
+    cnt, wcnt, wsum = _wbin_tile(x, w, valid, y_ref[0], y_ref[1])
+    cnt_ref[0, :] = cnt
+    wcnt_ref[0, :] = wcnt
+    sum_ref[0, :] = wsum
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def wcp_histogram(
+    x: jax.Array,
+    w: jax.Array,
+    edges: jax.Array,
+    *,
+    block_rows: int = DEF_HIST_BLOCK_ROWS,
+    interpret: bool = False,
+):
+    """Weighted binned pass: ``x``/``w`` (n,), realized edges (nbins+1,).
+
+    Returns ``(cnt, wcnt, wsum)`` of shape ``(nbins + 2,)`` — counts int32
+    (bit-identical to ``kernels.ref.wcp_histogram_ref``), masses/sums f32.
+    """
+    n = x.size
+    nbins = edges.shape[-1] - 1
+    x2, nblocks = _pad_to_tiles(x.reshape(-1), block_rows)
+    w2, _ = _pad_to_tiles(w.reshape(-1), block_rows)
+    lower, upper = _slot_bounds(
+        jnp.asarray(edges, jnp.float32).reshape(nbins + 1))
+    y = jnp.stack([lower, upper])  # (2, nbins + 2)
+
+    cnt, wcnt, wsum = pl.pallas_call(
+        functools.partial(_whistogram_kernel, n=n, block_rows=block_rows),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # slot bounds: tiny
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nbins + 2), lambda i: (i, 0)),
+            pl.BlockSpec((1, nbins + 2), lambda i: (i, 0)),
+            pl.BlockSpec((1, nbins + 2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, nbins + 2), jnp.int32),
+            jax.ShapeDtypeStruct((nblocks, nbins + 2), jnp.float32),
+            jax.ShapeDtypeStruct((nblocks, nbins + 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(y, x2, w2)
+    return (jnp.sum(cnt, axis=0), jnp.sum(wcnt, axis=0),
+            jnp.sum(wsum, axis=0))
+
+
+def _whistogram_batched_kernel(y_ref, x_ref, w_ref, cnt_ref, wcnt_ref,
+                               sum_ref, *, n, block_rows):
+    r = pl.program_id(0)  # problem row
+    b = pl.program_id(1)  # block within the row
+    x = x_ref[0].astype(jnp.float32)  # (block_rows, LANES)
+    w = w_ref[0].astype(jnp.float32)
+    valid = _valid_mask(b, x.shape, n, block_rows)
+    cnt, wcnt, wsum = _wbin_tile(x, w, valid, y_ref[0, r], y_ref[1, r])
+    cnt_ref[0, 0, :] = cnt
+    wcnt_ref[0, 0, :] = wcnt
+    sum_ref[0, 0, :] = wsum
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def wcp_histogram_batched(
+    x: jax.Array,
+    w: jax.Array,
+    edges: jax.Array,
+    *,
+    block_rows: int = DEF_HIST_BLOCK_ROWS,
+    interpret: bool = False,
+):
+    """Row-wise weighted binned pass: ``x``/``w`` (B, n), per-row edges
+    ``(B, nbins+1)``.  Returns ``(cnt, wcnt, wsum)``, each
+    ``(B, nbins + 2)``."""
+    bsz, n = x.shape
+    nbins = edges.shape[-1] - 1
+    x3, nblocks = _pad_to_tiles(x, block_rows)
+    w3, _ = _pad_to_tiles(w, block_rows)
+    lower, upper = _slot_bounds(
+        jnp.asarray(edges, jnp.float32).reshape(bsz, nbins + 1))
+    y = jnp.stack([lower, upper])  # (2, B, nbins + 2)
+
+    cnt, wcnt, wsum = pl.pallas_call(
+        functools.partial(_whistogram_batched_kernel, n=n,
+                          block_rows=block_rows),
+        grid=(bsz, nblocks),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((1, block_rows, LANES), lambda r, b: (r, b, 0)),
+            pl.BlockSpec((1, block_rows, LANES), lambda r, b: (r, b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, nbins + 2), lambda r, b: (r, b, 0)),
+            pl.BlockSpec((1, 1, nbins + 2), lambda r, b: (r, b, 0)),
+            pl.BlockSpec((1, 1, nbins + 2), lambda r, b: (r, b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, nblocks, nbins + 2), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, nblocks, nbins + 2), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, nblocks, nbins + 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(y, x3, w3)
+    return (jnp.sum(cnt, axis=1), jnp.sum(wcnt, axis=1),
+            jnp.sum(wsum, axis=1))
+
+
+def _whistogram_multi_kernel(y_ref, x_ref, w_ref, cnt_ref, wcnt_ref, sum_ref,
+                             *, n, npiv, block_rows):
+    b = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)  # (block_rows, LANES)
+    w = w_ref[...].astype(jnp.float32)
+    valid = _valid_mask(b, x.shape, n, block_rows)
+    for j in range(npiv):  # static unroll
+        cnt, wcnt, wsum = _wbin_tile(x, w, valid, y_ref[0, j], y_ref[1, j])
+        cnt_ref[0, j, :] = cnt
+        wcnt_ref[0, j, :] = wcnt
+        sum_ref[0, j, :] = wsum
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def wcp_histogram_multi(
+    x: jax.Array,
+    w: jax.Array,
+    edges: jax.Array,
+    *,
+    block_rows: int = DEF_HIST_BLOCK_ROWS,
+    interpret: bool = False,
+):
+    """Shared-x weighted multi-bracket binned pass: ``x``/``w`` (n,),
+    per-pivot realized edges ``(K, nbins+1)``.  Returns ``(cnt, wcnt,
+    wsum)``, each ``(K, nbins + 2)``."""
+    n = x.size
+    npiv, nbins = edges.shape[0], edges.shape[-1] - 1
+    x2, nblocks = _pad_to_tiles(x.reshape(-1), block_rows)
+    w2, _ = _pad_to_tiles(w.reshape(-1), block_rows)
+    lower, upper = _slot_bounds(jnp.asarray(edges, jnp.float32))
+    y = jnp.stack([lower, upper])  # (2, K, nbins + 2)
+
+    cnt, wcnt, wsum = pl.pallas_call(
+        functools.partial(_whistogram_multi_kernel, n=n, npiv=npiv,
+                          block_rows=block_rows),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, npiv, nbins + 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, npiv, nbins + 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, npiv, nbins + 2), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, npiv, nbins + 2), jnp.int32),
+            jax.ShapeDtypeStruct((nblocks, npiv, nbins + 2), jnp.float32),
+            jax.ShapeDtypeStruct((nblocks, npiv, nbins + 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(y, x2, w2)
+    return (jnp.sum(cnt, axis=0), jnp.sum(wcnt, axis=0),
+            jnp.sum(wsum, axis=0))

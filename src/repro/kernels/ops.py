@@ -81,6 +81,98 @@ def fused_partials_multi(x, y, *, backend: str | None = None):
     raise ValueError(f"unknown backend {backend!r}")
 
 
+def _resolve_backend_weighted(backend: str | None, x: jax.Array,
+                              w: jax.Array) -> str:
+    """Weighted variant of :func:`_resolve_backend`: the f64 reroute fires
+    when EITHER operand is f64 (f64 weights on f32 data must accumulate
+    mass at full precision or the weighted certificates lie)."""
+    if backend is None:
+        backend = "pallas" if _on_tpu() else "jnp"
+    if backend == "pallas" and (x.dtype == jnp.float64
+                                or w.dtype == jnp.float64):
+        backend = "jnp"
+    return backend
+
+
+def fused_weighted_partials(x, w, y, *, backend: str | None = None):
+    """Six weighted partials ``(wsum_pos, wsum_neg, w_lt, w_le, n_lt,
+    n_le)`` for pivot ``y`` — kernel-accelerated."""
+    backend = _resolve_backend_weighted(backend, x, w)
+    if backend == "pallas":
+        return cp_objective.wcp_partials(x, w, y)
+    if backend == "pallas_interpret":
+        return cp_objective.wcp_partials(x, w, y, interpret=True)
+    if backend == "jnp":
+        return ref.wcp_partials_ref(x, w, y)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def fused_weighted_partials_batched(x, w, y, *, backend: str | None = None):
+    """Row-wise weighted variant over (B, n) problems."""
+    backend = _resolve_backend_weighted(backend, x, w)
+    if backend == "pallas":
+        return cp_objective.wcp_partials_batched(x, w, y)
+    if backend == "pallas_interpret":
+        return cp_objective.wcp_partials_batched(x, w, y, interpret=True)
+    if backend == "jnp":
+        return ref.wcp_partials_batched_ref(x, w, y)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def fused_weighted_partials_multi(x, w, y, *, backend: str | None = None):
+    """Shared-x weighted multi-pivot variant: ``x``/``w`` (n,), ``y`` (K,)."""
+    backend = _resolve_backend_weighted(backend, x, w)
+    if backend == "pallas":
+        return cp_objective.wcp_partials_multi(x, w, y)
+    if backend == "pallas_interpret":
+        return cp_objective.wcp_partials_multi(x, w, y, interpret=True)
+    if backend == "jnp":
+        return ref.wcp_partials_multi_ref(x, w, y)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def fused_weighted_histogram(x, w, edges, *, backend: str | None = None):
+    """Weighted binned pass: ``(cnt, wcnt, wsum)`` per bracket sub-interval
+    (slot weight mass next to the count — the weighted narrowing signal)."""
+    backend = _resolve_backend_weighted(backend, x, w)
+    if backend == "pallas":
+        return cp_objective.wcp_histogram(x, w, edges)
+    if backend == "pallas_interpret":
+        return cp_objective.wcp_histogram(x, w, edges, interpret=True)
+    if backend == "jnp":
+        return ref.wcp_histogram_ref(x, w, edges)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def fused_weighted_histogram_batched(x, w, edges, *,
+                                     backend: str | None = None):
+    """Row-wise weighted binned pass: ``x``/``w`` (B, n), per-row edges
+    ``(B, nbins+1)``."""
+    backend = _resolve_backend_weighted(backend, x, w)
+    if backend == "pallas":
+        return cp_objective.wcp_histogram_batched(x, w, edges)
+    if backend == "pallas_interpret":
+        return cp_objective.wcp_histogram_batched(x, w, edges,
+                                                  interpret=True)
+    if backend == "jnp":
+        return ref.wcp_histogram_batched_ref(x, w, edges)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def fused_weighted_histogram_multi(x, w, edges, *,
+                                   backend: str | None = None):
+    """Shared-x weighted multi-bracket binned pass: ``x``/``w`` (n,),
+    per-pivot edges ``(K, nbins+1)``."""
+    backend = _resolve_backend_weighted(backend, x, w)
+    if backend == "pallas":
+        return cp_objective.wcp_histogram_multi(x, w, edges)
+    if backend == "pallas_interpret":
+        return cp_objective.wcp_histogram_multi(x, w, edges, interpret=True)
+    if backend == "jnp":
+        return ref.wcp_histogram_multi_ref(x, w, edges)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
 def fused_histogram(x, edges, *, backend: str | None = None):
     """Binned data pass: (count, sum) per bracket sub-interval.
 

@@ -115,3 +115,87 @@ def cp_histogram_multi_ref(x: jax.Array, edges: jax.Array):
     shape ``(K, nbins + 2)``."""
     return jax.vmap(cp_histogram_ref, in_axes=(None, 0))(x.reshape(-1),
                                                          edges)
+
+
+# ---------------------------------------------------------------------------
+# Weighted selection: fused weighted-partials and weighted-histogram oracles
+# ---------------------------------------------------------------------------
+
+
+def _waccum_dtype(x, w):
+    # Weighted accumulation promotes BOTH operands (f64 weights on f32 data
+    # must accumulate mass in f64 — the x64-exact path mirrors counts).
+    return jnp.promote_types(jnp.promote_types(x.dtype, w.dtype),
+                             jnp.float32)
+
+
+def wcp_partials_ref(x: jax.Array, w: jax.Array, y: jax.Array):
+    """Oracle for kernels.cp_objective.wcp_partials: six additive partials
+    ``(wsum_pos, wsum_neg, w_lt, w_le, n_lt, n_le)`` — weighted objective
+    terms, weight masses below/at-or-below the pivot, and the element
+    counts (which still drive the cap-based stopping rule)."""
+    dt = _waccum_dtype(x, w)
+    x = x.reshape(-1).astype(dt)
+    w = w.reshape(-1).astype(dt)
+    y = jnp.asarray(y, dt)
+    d = x - y
+    zero = jnp.zeros_like(x)
+    wsum_pos = jnp.sum(jnp.where(d > 0, w * d, zero))
+    wsum_neg = jnp.sum(jnp.where(d < 0, -w * d, zero))
+    w_lt = jnp.sum(jnp.where(d < 0, w, zero))
+    w_le = jnp.sum(jnp.where(d <= 0, w, zero))
+    n_lt = jnp.sum(d < 0, dtype=jnp.int32)
+    n_le = jnp.sum(d <= 0, dtype=jnp.int32)
+    return wsum_pos, wsum_neg, w_lt, w_le, n_lt, n_le
+
+
+def wcp_partials_batched_ref(x: jax.Array, w: jax.Array, y: jax.Array):
+    """Oracle for kernels.cp_objective.wcp_partials_batched: ``x``/``w``
+    (B, n), ``y`` (B,); returns six (B,) vectors."""
+    dt = _waccum_dtype(x, w)
+    return jax.vmap(wcp_partials_ref)(x.astype(dt), w.astype(dt),
+                                      jnp.asarray(y, dt))
+
+
+def wcp_partials_multi_ref(x: jax.Array, w: jax.Array, y: jax.Array):
+    """Oracle for kernels.cp_objective.wcp_partials_multi: shared ``x``/``w``
+    (n,), ``y`` (K,) pivots; returns six (K,) vectors."""
+    dt = _waccum_dtype(x, w)
+    return jax.vmap(wcp_partials_ref, in_axes=(None, None, 0))(
+        x.reshape(-1).astype(dt), w.reshape(-1).astype(dt),
+        jnp.asarray(y, dt)
+    )
+
+
+def wcp_histogram_ref(x: jax.Array, w: jax.Array, edges: jax.Array):
+    """Oracle for kernels.cp_objective.wcp_histogram: same slot layout as
+    :func:`cp_histogram_ref`, returning ``(cnt, wcnt, wsum)`` — counts,
+    per-slot weight mass sum(w_i) and per-slot sum(w_i * x_i)."""
+    dt = _waccum_dtype(x, w)
+    x = x.reshape(-1).astype(dt)
+    w = w.reshape(-1).astype(dt)
+    nbins = edges.shape[-1] - 1
+    # no value-changing cast: the engine builds edges at (at least) the
+    # promoted dtype, so this astype is an identity
+    edges = jnp.asarray(edges, dt).reshape(nbins + 1)
+    slot = jnp.searchsorted(edges, x, side="left").astype(jnp.int32)
+    nslots = nbins + 2
+    cnt = jnp.zeros((nslots,), jnp.int32).at[slot].add(1)
+    wcnt = jnp.zeros((nslots,), dt).at[slot].add(w)
+    wsum = jnp.zeros((nslots,), dt).at[slot].add(w * x)
+    return cnt, wcnt, wsum
+
+
+def wcp_histogram_batched_ref(x: jax.Array, w: jax.Array,
+                              edges: jax.Array):
+    """Oracle for kernels.cp_objective.wcp_histogram_batched: ``x``/``w``
+    (B, n), per-row edges ``(B, nbins+1)``; outputs ``(B, nbins + 2)``."""
+    return jax.vmap(wcp_histogram_ref)(x, w, edges)
+
+
+def wcp_histogram_multi_ref(x: jax.Array, w: jax.Array, edges: jax.Array):
+    """Oracle for kernels.cp_objective.wcp_histogram_multi: shared
+    ``x``/``w`` (n,), per-pivot edges ``(K, nbins+1)``; outputs
+    ``(K, nbins + 2)``."""
+    return jax.vmap(wcp_histogram_ref, in_axes=(None, None, 0))(
+        x.reshape(-1), w.reshape(-1), edges)

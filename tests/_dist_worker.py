@@ -64,6 +64,31 @@ def main():
         mesh, P("data"))
     check(int(res.iters) <= 5, f"too many rounds: {res.iters}")
 
+    # --- weighted sharded selection: psum'd mass vectors + pair gather ---
+    x = rng.standard_normal(1 << 16).astype(np.float32)
+    w = rng.integers(0, 5, 1 << 16).astype(np.float32)
+    w[0] = 1.0
+    o = np.argsort(x, kind="stable")
+    cumw = np.cumsum(w[o].astype(np.float64))
+    for frac in [0.001, 0.25, 0.5, 0.999]:
+        wk = float(np.float32(max(frac * w.sum(), 0.5)))
+        res = distributed.sharded_weighted_order_statistic(
+            jnp.asarray(x), jnp.asarray(w), wk, mesh, P("data"),
+            cap_local=1024)
+        want = x[o][min(np.searchsorted(cumw, wk, "left"), x.size - 1)]
+        check(np.float32(res.value) == want,
+              f"weighted frac={frac}: {res.value} != {want}")
+        check(int(res.iters) <= 5,
+              f"weighted frac={frac}: too many rounds {res.iters}")
+    # uniform weights reproduce the unweighted answer exactly
+    n = x.size
+    k = (n + 1) // 2
+    res_w = distributed.sharded_weighted_order_statistic(
+        jnp.asarray(x), jnp.ones_like(jnp.asarray(x)), float(k), mesh,
+        P("data"), cap_local=1024)
+    check(np.float32(res_w.value) == np.partition(x, k - 1)[k - 1],
+          "weighted uniform != unweighted median")
+
     # --- median/order-stat across a mesh axis (coordinate-wise) ---
     vals = rng.standard_normal((n_dev, 4, 33)).astype(np.float32)
     # inject ties across replicas

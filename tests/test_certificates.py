@@ -1,0 +1,324 @@
+"""Certificate-invariant regression tests (the PR-2 fail-safe contract).
+
+The binned engine may mint EXACT_HIT only off a MEASURED invariant:
+
+    count(x <= value) >= k   with   count(x < value) < k        (counts)
+    mass(x <= value) >= wk   with   mass(x < value) < wk        (masses)
+
+These tests lock in the contract on its adversarial inputs — seeded
+tie-storms (certificates race the cap rule) and ulp-collapsed brackets
+(the collapse certificate is the only exit) — by recounting the invariant
+at every EXACT_HIT the engine reports, and by driving the shared
+narrowing-decision core (``binned_descent_step``) and the weighted loop
+directly with inconsistent count/mass vectors, which must STALL, never
+certify.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import selection
+from repro.core.objective import FnEvaluator
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def assert_exact_hits_verified(x, k, res):
+    """Any EXACT_HIT must satisfy the recounted count invariant."""
+    v = np.float32(res.value)
+    if int(res.status) == selection.EXACT_HIT:
+        n_lt = int((x < v).sum())
+        n_le = int((x <= v).sum())
+        assert n_lt < k <= n_le, (k, v, n_lt, n_le)
+
+
+def assert_weighted_exact_hits_verified(x, w, wk, res):
+    """Any weighted EXACT_HIT must satisfy the recounted mass invariant."""
+    v = np.float32(res.value)
+    if int(res.status) == selection.EXACT_HIT:
+        w_lt = float(w[x < v].sum())
+        w_le = float(w[x <= v].sum())
+        assert w_lt < wk <= w_le, (wk, v, w_lt, w_le)
+
+
+# ---------------------------------------------------------------------------
+# seeded tie-storms: certificates must survive duplicate avalanches
+# ---------------------------------------------------------------------------
+
+
+def _tie_storms(rng, n=6000):
+    """Adversarial duplicate patterns: storm at the answer, around it,
+    constant arrays, two-level splits, storm at the extremes."""
+    half = n // 2
+    return [
+        rng.integers(0, 3, n).astype(np.float32),            # 3 levels
+        np.full(n, 2.5, np.float32),                         # constant
+        np.concatenate([np.full(half, 1.0), np.full(n - half, 2.0)]
+                       ).astype(np.float32),                 # two levels
+        np.concatenate([rng.standard_normal(n - half),
+                        np.full(half, 0.125)]).astype(np.float32),
+        np.concatenate([np.full(n - 2, -1e9), [0.0], [1e9]]
+                       ).astype(np.float32),                 # extreme storm
+    ]
+
+
+@pytest.mark.parametrize("nbins", [4, 128])
+def test_tie_storm_exact_hits_verified(nbins):
+    rng = np.random.default_rng(100)
+    for x in _tie_storms(rng):
+        rng.shuffle(x)
+        n = x.size
+        for k in [1, 2, n // 3, (n + 1) // 2, n - 1, n]:
+            res = selection.order_statistic(
+                jnp.asarray(x), k, method="binned", cap=4, nbins=nbins)
+            np.testing.assert_equal(np.float32(res.value),
+                                    np.partition(x, k - 1)[k - 1])
+            assert_exact_hits_verified(x, k, res)
+
+
+def test_weighted_tie_storm_exact_hits_verified():
+    rng = np.random.default_rng(101)
+    for x in _tie_storms(rng):
+        n = x.size
+        w = rng.integers(0, 3, n).astype(np.float32)
+        w[0] = 1.0
+        W = float(w.sum())
+        for frac in [0.001, 0.33, 0.5, 0.999]:
+            wk = float(np.float32(max(frac * W, 0.5)))
+            res = selection.weighted_order_statistic(
+                jnp.asarray(x), jnp.asarray(w), wk, method="binned",
+                cap=4)
+            assert int(res.status) != selection.NOT_CONVERGED
+            assert_weighted_exact_hits_verified(x, w, wk, res)
+
+
+# ---------------------------------------------------------------------------
+# ulp-collapsed brackets: the collapse certificate under a magnifier
+# ---------------------------------------------------------------------------
+
+
+def _ulp_cluster(rng, base, n_levels, n):
+    """Values spanning only a few ulps around ``base`` (with duplicates):
+    forces the bracket to collapse to single representable values."""
+    levels = [base]
+    for _ in range(n_levels - 1):
+        levels.append(np.nextafter(levels[-1], np.float32(np.inf),
+                                   dtype=np.float32))
+    return np.asarray(levels, np.float32)[rng.integers(0, n_levels, n)]
+
+
+@pytest.mark.parametrize("base", [1.0, -255.1234, 3e38])
+def test_ulp_collapsed_bracket_exact_hits_verified(base):
+    rng = np.random.default_rng(102)
+    x = _ulp_cluster(rng, np.float32(base), 4, 5000)
+    n = x.size
+    for k in [1, n // 4, (n + 1) // 2, n]:
+        res = selection.order_statistic(jnp.asarray(x), k, method="binned",
+                                        cap=2)
+        np.testing.assert_equal(np.float32(res.value),
+                                np.partition(x, k - 1)[k - 1])
+        assert_exact_hits_verified(x, k, res)
+
+
+def test_ulp_cluster_at_ftz_floor_fails_safe():
+    """At denormal-adjacent magnitudes (1.2e-38) the bin width flushes to
+    zero (FTZ), so the bracket CANNOT narrow below a few ulps: with an
+    undersized cap the engine must stall into an honest non-exact status —
+    never a lying EXACT_HIT — and with the default cap the survivor
+    compaction must still resolve the answer exactly."""
+    rng = np.random.default_rng(102)
+    x = _ulp_cluster(rng, np.float32(1.2e-38), 4, 5000)
+    n = x.size
+    for k in [1, n // 4, (n + 1) // 2, n]:
+        want = np.partition(x, k - 1)[k - 1]
+        # default cap: the stalled bracket's <= 4-ulp survivor set fits the
+        # compaction buffer, so the answer is exact
+        res = selection.order_statistic(jnp.asarray(x), k, method="binned")
+        np.testing.assert_equal(np.float32(res.value), want)
+        assert_exact_hits_verified(x, k, res)
+        # cap=2: thousands of duplicate survivors cannot compact and the
+        # tie fallback only reaches one distinct value up — the fail-safe
+        # contract is an honest status, not a minted certificate
+        res = selection.order_statistic(jnp.asarray(x), k, method="binned",
+                                        cap=2)
+        assert_exact_hits_verified(x, k, res)
+        if int(res.status) != selection.NOT_CONVERGED:
+            np.testing.assert_equal(np.float32(res.value), want)
+
+
+def test_weighted_ulp_collapsed_bracket():
+    rng = np.random.default_rng(103)
+    x = _ulp_cluster(rng, np.float32(7.25), 3, 4000)
+    w = rng.integers(0, 4, x.size).astype(np.float32)
+    w[0] = 1.0
+    W = float(w.sum())
+    for frac in [0.1, 0.5, 0.9]:
+        wk = float(np.float32(frac * W))
+        res = selection.weighted_order_statistic(
+            jnp.asarray(x), jnp.asarray(w), wk, method="binned", cap=2)
+        assert int(res.status) != selection.NOT_CONVERGED
+        assert_weighted_exact_hits_verified(x, w, wk, res)
+        # differential against the sorted-cumsum oracle (integer weights:
+        # masses exactly summable)
+        o = np.argsort(x, kind="stable")
+        c = np.cumsum(w[o].astype(np.float64))
+        want = x[o][min(np.searchsorted(c, wk, "left"), x.size - 1)]
+        np.testing.assert_equal(np.float32(res.value), want)
+
+
+# ---------------------------------------------------------------------------
+# violated invariants must stall, never certify
+# ---------------------------------------------------------------------------
+
+
+def test_descent_step_fails_safe_on_short_counts():
+    """cum[-1] < k (counts inconsistent with the bracket invariant):
+    argmax-of-all-False must not masquerade as hit_lo / exact."""
+    from repro.kernels.ref import bin_edges
+
+    cum = jnp.asarray([[0, 1, 2, 3]], jnp.int32)
+    yL = jnp.asarray([0.0], jnp.float32)
+    yR = jnp.asarray([1.0], jnp.float32)
+    kk = jnp.asarray([10], jnp.int32)
+    *_, hit_lo, exact, stall = selection.binned_descent_step(
+        cum, bin_edges(yL, yR, 3), yL, yR, kk)
+    assert not bool(exact[0]) and not bool(hit_lo[0]) and bool(stall[0])
+
+
+def test_descent_step_fails_safe_on_short_mass():
+    """The weighted regime drives the SAME core with float masses: a mass
+    vector that never reaches wk must stall identically — even when the
+    bracket is ulp-collapsed (the collapse certificate must stay gated on
+    the mass invariant)."""
+    from repro.kernels.ref import bin_edges
+
+    yL = jnp.asarray([1.0], jnp.float32)
+    yR = jnp.asarray([float(np.nextafter(np.float32(1.0),
+                                         np.float32(np.inf)))], jnp.float32)
+    cumw = jnp.asarray([[0.25, 0.5, 0.5, 0.75]], jnp.float32)
+    wk = jnp.asarray([2.0], jnp.float32)
+    *_, hit_lo, exact, stall = selection.binned_descent_step(
+        cumw, bin_edges(yL, yR, 3), yL, yR, wk)
+    assert not bool(exact[0]) and not bool(hit_lo[0]) and bool(stall[0])
+    # sanity: with a CONSISTENT mass vector the collapse certifies
+    cumw_ok = jnp.asarray([[0.25, 0.5, 0.5, 2.5]], jnp.float32)
+    *_, hit_lo, exact, stall = selection.binned_descent_step(
+        cumw_ok, bin_edges(yL, yR, 3), yL, yR, wk)
+    assert bool(exact[0]) and not bool(stall[0])
+
+
+def test_weighted_late_hit_lo_demoted_to_stall():
+    """A mass vector claiming mass(x <= yL) >= wk AFTER the first sweep can
+    only be an inexact-mass ulp-flip (the invariant forbids it in exact
+    arithmetic): the weighted binned loop must freeze the row (fail safe),
+    never mint the non-element edge value as EXACT_HIT."""
+    n = 64
+    x = jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)
+    w = jnp.ones((n,), jnp.float32)
+    W = jnp.sum(w)
+    wk = jnp.asarray([0.5 * n], jnp.float32)
+    xmin, xmax = x[0], x[-1]
+
+    def init_stats():
+        one = lambda v: jnp.reshape(v, (1,))
+        return one(xmin), one(xmax), one(jnp.mean(x))
+
+    def lying_histogram(edges):
+        from repro.kernels import ref
+
+        cnt, wcnt, wsum = ref.wcp_histogram_ref(x, w, edges[0])
+        honest = (cnt[None, :], wcnt[None, :], wsum[None, :])
+        # sweep 1 sees the full bracket (edges[0] == xmin); afterwards lie:
+        # all mass at or below the bracket's left end
+        first_sweep = edges[0, 0] == xmin
+        lie_wcnt = jnp.zeros_like(honest[1]).at[:, 0].set(W)
+        return (honest[0],
+                jnp.where(first_sweep, honest[1], lie_wcnt),
+                honest[2])
+
+    ev = FnEvaluator(
+        partials=None, n=jnp.asarray(n, jnp.int32), k=wk,
+        init_stats=init_stats, histogram=lying_histogram,
+        weights_total=jnp.reshape(W, ()))
+    s, _, _ = selection.weighted_binned_loop_batched(ev, nbins=8, maxit=8,
+                                                     cap=1)
+    # the lie arrives on sweep 2: the loop must stall the row unfinished
+    # rather than certify yL (a non-element bin edge) as the answer
+    assert not bool(s.found_exact[0])
+    assert int(s.iters[0]) == 2  # sweep 1 honest narrowing + sweep 2 stall
+    assert bool(s.yL[0] > xmin) and bool(s.yR[0] < xmax)  # sweep-1 bracket
+
+
+def test_weighted_extreme_shortcuts_gated_on_seed_bracket():
+    """The weighted at_min/at_max finalize shortcuts re-measure masses with
+    a different summation order than the loop: a rounding flip near wk
+    (cLw >= wk with the bracket far from the minimum) must NOT override the
+    answer with xmin as EXACT_HIT — it falls through to the sorted-prefix
+    chain.  Only a bracket still AT the extreme may certify through them."""
+    from repro.core.selection import (
+        BatchState, _assemble_answers_weighted)
+
+    def state(yL, yR):
+        one = lambda v: jnp.asarray([v], jnp.float32)
+        return BatchState(
+            yL=one(yL), fL=one(0), gL=one(0), yR=one(yR), fR=one(0),
+            gR=one(0), cleL=jnp.asarray([1], jnp.int32),
+            cleR=jnp.asarray([4], jnp.int32), t_exact=one(jnp.nan),
+            found_exact=jnp.asarray([False]),
+            iters=jnp.asarray([1], jnp.int32),
+            it=jnp.asarray(1, jnp.int32), tp=one(0), fp=one(0))
+
+    wkk = jnp.asarray([5.0], jnp.float32)
+    zs = jnp.asarray([[2.0, 3.0]], jnp.float32)
+    zws = jnp.asarray([[1.0, 1.0]], jnp.float32)
+    common = dict(cap=2, zs=zs, zws=zws, n_in=jnp.asarray([2], jnp.int32),
+                  vnext=jnp.asarray([2.0], jnp.float32),
+                  w_le_v=jnp.asarray([6.0], jnp.float32),
+                  xmin=jnp.asarray([0.0], jnp.float32),
+                  xmax=jnp.asarray([9.0], jnp.float32))
+    # cLw >= wk (flip) but yL moved off xmin: sorted-prefix answer, not xmin
+    res = _assemble_answers_weighted(
+        wkk, state(1.5, 3.0), cLw=jnp.asarray([5.0], jnp.float32),
+        w_lt_max=jnp.asarray([10.0], jnp.float32), **common)
+    assert float(res.value[0]) == 2.0
+    assert int(res.status[0]) == selection.HYBRID_SORT
+    # w_lt_max < wk (flip) but yR moved off xmax: same fail-safe
+    res = _assemble_answers_weighted(
+        wkk, state(1.5, 3.0), cLw=jnp.asarray([4.0], jnp.float32),
+        w_lt_max=jnp.asarray([4.5], jnp.float32), **common)
+    assert float(res.value[0]) == 2.0
+    assert int(res.status[0]) == selection.HYBRID_SORT
+    # bracket still AT the extreme: the shortcut may certify
+    res = _assemble_answers_weighted(
+        wkk, state(0.0, 9.0), cLw=jnp.asarray([5.0], jnp.float32),
+        w_lt_max=jnp.asarray([10.0], jnp.float32), **common)
+    assert float(res.value[0]) == 0.0
+    assert int(res.status[0]) == selection.EXACT_HIT
+
+
+def test_binned_never_mints_unverified_exact_hit_random_sweep():
+    """Randomized spot-sweep across sizes/caps/nbins: every EXACT_HIT the
+    binned engine reports (weighted or not) survives the recount."""
+    rng = np.random.default_rng(104)
+    for trial in range(20):
+        n = int(rng.integers(10, 3000))
+        x = (rng.integers(-50, 50, n)).astype(np.float32) * 0.25
+        k = int(rng.integers(1, n + 1))
+        cap = int(rng.integers(1, 32))
+        nbins = int(rng.choice([2, 8, 128]))
+        res = selection.order_statistic(jnp.asarray(x), k, method="binned",
+                                        cap=cap, nbins=nbins)
+        np.testing.assert_equal(np.float32(res.value),
+                                np.partition(x, k - 1)[k - 1])
+        assert_exact_hits_verified(x, k, res)
+
+        w = rng.integers(0, 3, n).astype(np.float32)
+        w[0] = 1.0
+        wk = float(np.float32(max(float(w.sum()) * rng.uniform(), 0.5)))
+        wres = selection.weighted_order_statistic(
+            jnp.asarray(x), jnp.asarray(w), wk, method="binned", cap=cap,
+            nbins=nbins)
+        assert_weighted_exact_hits_verified(x, w, wk, wres)
+        assert int(wres.status) != selection.NOT_CONVERGED

@@ -252,6 +252,172 @@ def test_ops_dispatch_histogram():
     np.testing.assert_array_equal(np.asarray(b[0]), np.asarray(a[0]))
 
 
+# ---------------------------------------------------------------------------
+# weighted kernels (interpret mode) vs jnp oracles
+# ---------------------------------------------------------------------------
+
+
+def check_weighted_partials(got, want):
+    # four float partials (reduction order differs), two exact counts
+    for g, w in zip(got[:4], want[:4]):
+        np.testing.assert_allclose(np.asarray(g, np.float64),
+                                   np.asarray(w, np.float64),
+                                   rtol=2e-5, atol=1e-5)
+    for g, w in zip(got[4:], want[4:]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@pytest.mark.parametrize("n", [1, 7, 1024, 4097, 65537])
+def test_wcp_partials_shapes(n):
+    rng = np.random.default_rng(n + 3)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0, 2, n).astype(np.float32))
+    y = jnp.float32(0.1)
+    got = cp_objective.wcp_partials(x, w, y, block_rows=8, interpret=True)
+    want = ref.wcp_partials_ref(x, w, y)
+    check_weighted_partials(got, want)
+
+
+def test_wcp_partials_ties_zero_weights_and_extremes():
+    x = jnp.asarray(
+        np.array([0.0, 0.0, 0.0, 1e9, -1e9, 0.5, 0.5, -0.5] * 97, np.float32)
+    )
+    w = jnp.asarray(
+        np.array([0.0, 1.0, 2.0, 1.0, 0.5, 0.0, 3.0, 1.0] * 97, np.float32)
+    )
+    for y in [0.0, 0.5, -0.5, 1e9, 2e9]:
+        got = cp_objective.wcp_partials(x, w, jnp.float32(y), block_rows=8,
+                                        interpret=True)
+        want = ref.wcp_partials_ref(x, w, jnp.float32(y))
+        check_weighted_partials(got, want)
+
+
+@pytest.mark.parametrize("bsz,n", [(1, 100), (3, 1024), (5, 4097)])
+def test_wcp_partials_batched(bsz, n):
+    rng = np.random.default_rng(bsz * n + 1)
+    x = jnp.asarray(rng.standard_normal((bsz, n)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0, 2, (bsz, n)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal(bsz).astype(np.float32))
+    got = cp_objective.wcp_partials_batched(x, w, y, block_rows=8,
+                                            interpret=True)
+    want = ref.wcp_partials_batched_ref(x, w, y)
+    check_weighted_partials(got, want)
+
+
+@pytest.mark.parametrize("n,npiv", [(100, 3), (4097, 5), (65537, 2)])
+def test_wcp_partials_multi(n, npiv):
+    rng = np.random.default_rng(n * npiv + 2)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0, 2, n).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal(npiv).astype(np.float32))
+    got = cp_objective.wcp_partials_multi(x, w, y, block_rows=8,
+                                          interpret=True)
+    want = ref.wcp_partials_multi_ref(x, w, y)
+    check_weighted_partials(got, want)
+
+
+def check_weighted_histogram(got, want, n):
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_allclose(np.asarray(got[1], np.float64),
+                               np.asarray(want[1], np.float64),
+                               rtol=2e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got[2], np.float64),
+                               np.asarray(want[2], np.float64),
+                               rtol=2e-5, atol=1e-5)
+    assert int(jnp.sum(got[0])) == n  # slot layout partitions the array
+
+
+@pytest.mark.parametrize("n", [1, 7, 4097, 65537])
+@pytest.mark.parametrize("nbins", [8, 128])
+def test_wcp_histogram_shapes(n, nbins):
+    rng = np.random.default_rng(n + nbins + 5)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0, 2, n).astype(np.float32))
+    edges = ref.bin_edges(jnp.float32(-1.0), jnp.float32(1.5), nbins)
+    got = cp_objective.wcp_histogram(x, w, edges, block_rows=8,
+                                     interpret=True)
+    want = ref.wcp_histogram_ref(x, w, edges)
+    check_weighted_histogram(got, want, n)
+
+
+def test_wcp_histogram_edges_on_data_and_zero_weights():
+    """Bracket ends ON data values + zero-weight lanes: counts and masses
+    must stay bit-consistent with the searchsorted oracle's slotting."""
+    x = jnp.asarray(
+        np.array([0.0, 0.0, 0.5, 0.5, -0.5, 1.0, 2.0, -2.0] * 61,
+                 np.float32))
+    w = jnp.asarray(
+        np.array([0.0, 2.0, 1.0, 0.0, 1.5, 1.0, 0.5, 1.0] * 61, np.float32))
+    for lo, hi in [(0.0, 0.5), (-0.5, 0.5), (0.5, 0.5), (3.0, 4.0)]:
+        edges = ref.bin_edges(jnp.float32(lo), jnp.float32(hi), 8)
+        got = cp_objective.wcp_histogram(x, w, edges, block_rows=8,
+                                         interpret=True)
+        want = ref.wcp_histogram_ref(x, w, edges)
+        check_weighted_histogram(got, want, x.size)
+
+
+@pytest.mark.parametrize("bsz,n", [(1, 100), (3, 1024), (5, 4097)])
+def test_wcp_histogram_batched(bsz, n):
+    rng = np.random.default_rng(bsz * n + 7)
+    x = jnp.asarray(rng.standard_normal((bsz, n)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0, 2, (bsz, n)).astype(np.float32))
+    lo = jnp.asarray(rng.standard_normal(bsz).astype(np.float32) - 1.0)
+    hi = lo + 1.5
+    edges = ref.bin_edges(lo, hi, 16)
+    got = cp_objective.wcp_histogram_batched(x, w, edges, block_rows=8,
+                                             interpret=True)
+    want = ref.wcp_histogram_batched_ref(x, w, edges)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_allclose(np.float32(got[1]), np.float32(want[1]),
+                               rtol=2e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(jnp.sum(got[0], axis=1)),
+                                  np.full(bsz, n))
+
+
+@pytest.mark.parametrize("n,npiv", [(100, 3), (4097, 5)])
+def test_wcp_histogram_multi(n, npiv):
+    rng = np.random.default_rng(n * npiv + 9)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0, 2, n).astype(np.float32))
+    lo = jnp.asarray(rng.standard_normal(npiv).astype(np.float32) - 1.0)
+    edges = ref.bin_edges(lo, lo + 1.25, 16)
+    got = cp_objective.wcp_histogram_multi(x, w, edges, block_rows=8,
+                                           interpret=True)
+    want = ref.wcp_histogram_multi_ref(x, w, edges)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_allclose(np.float32(got[1]), np.float32(want[1]),
+                               rtol=2e-5, atol=1e-5)
+
+
+def test_ops_dispatch_weighted():
+    rng = np.random.default_rng(21)
+    x = jnp.asarray(rng.standard_normal(4096).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0, 2, 4096).astype(np.float32))
+    y = jnp.float32(-0.3)
+    a = ops.fused_weighted_partials(x, w, y, backend="jnp")
+    b = ops.fused_weighted_partials(x, w, y, backend="pallas_interpret")
+    check_weighted_partials(b, a)
+    e = ref.bin_edges(jnp.float32(-0.7), jnp.float32(0.9), 32)
+    a = ops.fused_weighted_histogram(x, w, e, backend="jnp")
+    b = ops.fused_weighted_histogram(x, w, e, backend="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(b[0]), np.asarray(a[0]))
+    np.testing.assert_allclose(np.float32(b[1]), np.float32(a[1]),
+                               rtol=2e-5, atol=1e-5)
+    xb = x.reshape(4, 1024)
+    wb = w.reshape(4, 1024)
+    yb = jnp.asarray(rng.standard_normal(4).astype(np.float32))
+    a = ops.fused_weighted_partials_batched(xb, wb, yb, backend="jnp")
+    b = ops.fused_weighted_partials_batched(xb, wb, yb,
+                                            backend="pallas_interpret")
+    check_weighted_partials(b, a)
+    e4 = ref.bin_edges(jnp.full((4,), -0.7, jnp.float32),
+                       jnp.full((4,), 0.9, jnp.float32), 32)
+    a = ops.fused_weighted_histogram_multi(x, w, e4, backend="jnp")
+    b = ops.fused_weighted_histogram_multi(x, w, e4,
+                                           backend="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(b[0]), np.asarray(a[0]))
+
+
 def test_selection_through_kernel_backend():
     """End-to-end: CP selection driven by the Pallas (interpret) kernel."""
     from repro.core import selection
