@@ -10,7 +10,6 @@ Resume after interruption:
   PYTHONPATH=src python examples/train_lm.py --steps 400 --ckpt-dir /tmp/lm_ckpt
 """
 import argparse
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,7 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import numpy as np
 

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import jax
@@ -79,7 +79,6 @@ class ModelConfig:
     def reduced(self, **overrides) -> "ModelConfig":
         """Tiny same-family config for CPU smoke tests."""
         unit = self.layer_pattern
-        nl = max(len(unit), 2 * len(unit)) + (1 if self.remainder else 0)
         kw = dict(
             n_layers=len(unit) * 2 + len(self.remainder),
             d_model=64,

@@ -3,13 +3,18 @@ story, mapped to TPU meshes).
 
 Two primitives, both ``shard_map``-native:
 
-* :func:`local_order_statistic` — the k-th order statistic of a 1-D array
-  sharded over one or more mesh axes.  Each CP iteration evaluates *local*
-  partials (one fused pass, Pallas-accelerated on TPU) and ``psum``s four
-  scalars — the paper's "partial sums from several GPUs are added together",
-  except the combine is an ICI all-reduce instead of a CPU hop.  The hybrid
-  finalize compacts *per shard* (fixed local capacity), ``all_gather``s the
-  tiny buffers and sorts — the paper's small-array ``z`` step.
+* :func:`local_order_statistic` — the k-th (or weighted, via ``weights=``)
+  order statistic of a 1-D array sharded over one or more mesh axes.  ONE
+  round loop serves both measures: each binned round is one local histogram
+  pass + a psum of the ``(nbins + 2,)`` slot-MEASURE vector (int counts on
+  the counting leg, fp masses on the weighted leg — the same vector is both
+  on the counting leg, so the wire carries it once), each cutting-plane
+  round psums the additive FG partials — the paper's "partial sums from
+  several GPUs are added together", except the combine is an ICI all-reduce
+  instead of a CPU hop.  The hybrid finalize compacts *per shard* (fixed
+  local capacity), ``all_gather``s the tiny buffers and sorts — the paper's
+  small-array ``z`` step (carrying the aligned weight buffers on the
+  weighted leg).
 
 * :func:`median_across_axis` — vectorized coordinate-wise order statistics
   *across* a mesh axis (n = axis size per coordinate, millions of
@@ -21,10 +26,11 @@ Two primitives, both ``shard_map``-native:
 
 Both primitives ride the batched-first selection engine: the psum combine is
 just another :class:`~repro.core.objective.Evaluator`.  The 1-D primitive
-wraps a ``ShardedEvaluator`` (local fused pass + psum of four scalars); the
-across-axis primitive builds an :func:`axis_evaluator` whose batch dimension
-is the coordinate set and hands it to ``selection.bracket_loop_batched`` —
-the same loop that runs rows-mode and shared-x selection on a single device.
+wraps a ``ShardedEvaluator`` (local fused pass + psum of the additive
+partials); the across-axis primitive builds an :func:`axis_evaluator` whose
+batch dimension is the coordinate set and hands it to
+``selection.bracket_loop_batched`` — the same loop that runs rows-mode and
+shared-x selection on a single device.
 
 Every function here must be called INSIDE ``shard_map`` (they take the mesh
 axis name(s)).  ``sharded_order_statistic`` is the user-facing wrapper.
@@ -112,6 +118,7 @@ def local_order_statistic(
     backend: Optional[str] = None,
     method: str = "binned",
     nbins: int = selection.DEF_NBINS,
+    weights: Optional[jax.Array] = None,
 ) -> selection.SelectResult:
     """k-th smallest of the *global* (sharded) array; call inside shard_map.
 
@@ -120,55 +127,81 @@ def local_order_statistic(
     stopping rule bounds the *per-shard* in-bracket count so the local
     fixed-capacity compaction never overflows regardless of shard imbalance.
 
+    With ``weights`` (sharded exactly like the data), ``k`` is the target
+    cumulative MASS and the result is the weighted order statistic — the
+    measure swap happens inside the :class:`ShardedEvaluator`; the round
+    loop and finalize below are shared by both legs.
+
     ``method='binned'`` (default) narrows by histogram sweeps: each round is
-    one local binned pass + a psum of the ``(nbins + 2,)`` slot-count vector
-    — the bracket shrinks by a factor of ``nbins`` per collective round, so
-    the whole solve is ~3 rounds where the cutting-plane loop (``'cp'``)
-    takes ~15-40 psums of the four scalars.
+    one local binned pass + a psum of the ``(nbins + 2,)`` slot-measure
+    vector — the bracket shrinks by a factor of ``nbins`` per collective
+    round, so the whole solve is ~3 rounds where the cutting-plane loop
+    (``'cp'``) takes ~15-40 psums of the additive partials.  The slot
+    COUNTS always stay per-shard (they feed the local cap bookkeeping); on
+    the counting leg the psum'd counts double as the measure vector, so the
+    wire cost is unchanged from the pre-unification engine on both legs.
     """
     x_local = x_local.reshape(-1)
     n_local = x_local.size
-    # the evaluator owns the data layout: local fused pass (Pallas on TPU)
-    # + psum of the additive partials is the whole multi-device story
-    ev = ShardedEvaluator(x_local, k, axes, backend=backend)
-    n, kk = ev.n, ev.k
+    axes_t = _axes_tuple(axes)
+    weighted = weights is not None
+    if weighted:
+        weights = jnp.asarray(weights).reshape(-1)
+    # the evaluator owns the data layout AND the measure: local fused pass
+    # (Pallas on TPU) + psum of the additive partials is the whole
+    # multi-device story
+    ev = ShardedEvaluator(x_local, k, axes, backend=backend, weights=weights)
+    kk = ev.k
     dtype = x_local.dtype
-    nf = n.astype(dtype)
+    wl = weights.astype(kk.dtype) if weighted else None
 
     xmin, xmax, xmean = ev.init_stats()
-    alpha, beta = os_weights(nf, kk, dtype)
+
+    # analytic cut seeds, mirroring selection._seed_state's two measure legs
+    if weighted:
+        Wsafe = jnp.maximum(ev.W, jnp.asarray(1e-30, ev.W.dtype))
+        alpha = ((ev.W - kk) / Wsafe).astype(dtype)
+        beta = (kk / Wsafe).astype(dtype)
+        gL0, gR0 = -beta, alpha
+    else:
+        nf = ev.n.astype(dtype)
+        alpha, beta = os_weights(nf, kk, dtype)
+        gL0 = alpha * (1.0 / nf) - beta * (nf - 1.0) / nf
+        gR0 = alpha * (nf - 1.0) / nf - beta * (1.0 / nf)
 
     s0 = _DistState(
         yL=xmin,
         fL=beta * (xmean - xmin),
-        gL=alpha * (1.0 / nf) - beta * (nf - 1.0) / nf,
+        gL=gL0,
         yR=xmax,
         fR=alpha * (xmax - xmean),
-        gR=alpha * (nf - 1.0) / nf - beta * (1.0 / nf),
-        loc_cleL=_pcast_varying(jnp.asarray(0, jnp.int32),
-                                _axes_tuple(axes)),
-        loc_cleR=_pcast_varying(jnp.asarray(n_local, jnp.int32),
-                                _axes_tuple(axes)),
+        gR=gR0,
+        loc_cleL=_pcast_varying(jnp.asarray(0, jnp.int32), axes_t),
+        loc_cleR=_pcast_varying(jnp.asarray(n_local, jnp.int32), axes_t),
         max_in=jnp.asarray(n_local, jnp.int32),
         t_exact=jnp.asarray(jnp.nan, dtype),
         found_exact=jnp.asarray(False),
         it=jnp.asarray(0, jnp.int32),
     )
 
-    def cond(s):
-        return ((~s.found_exact) & (s.max_in > cap_local)
+    def cond(carry):
+        s, stalled = carry
+        return ((~s.found_exact) & ~stalled & (s.max_in > cap_local)
                 & (s.it < maxit) & (s.yR > s.yL))
 
-    def body(s):
+    def cp_body(carry):
+        s, stalled = carry
         t = (s.fR - s.fL + s.yL * s.gL - s.yR * s.gR) / (s.gL - s.gR)
         bad = ~jnp.isfinite(t) | (t <= s.yL) | (t >= s.yR)
-        t = jnp.where(bad, 0.5 * (s.yL + s.yR), t).astype(dtype)
+        t = jnp.where(bad, 0.5 * (s.yL + s.yR), t).astype(s.yL.dtype)
         # local partials kept un-psum'd too: the stopping rule bounds the
         # PER-SHARD in-bracket count so the local compaction never overflows
-        sp, sn, lt_loc, le_loc = ev.local_partials(t)
-        fg = ev.combine((sp, sn, lt_loc, le_loc))
-        exact = (fg.n_lt < kk) & (kk <= fg.n_le)
-        move_left = fg.g_hi < 0
+        loc = ev.local_partials(t)
+        le_loc = loc[-1]   # n_le is the trailing partial on both legs
+        fg = ev.combine(loc)
+        # the measure decisions ARE the engine's (see bracket_loop_batched)
+        exact = (fg.m_lt < kk) & (kk <= fg.m_le)
+        move_left = fg.m_le < kk
         loc_cleL = jnp.where(move_left, le_loc, s.loc_cleL)
         loc_cleR = jnp.where(move_left | exact, s.loc_cleR, le_loc)
         max_in = _pmax(loc_cleR - loc_cleL, axes)
@@ -183,12 +216,7 @@ def local_order_statistic(
             t_exact=jnp.where(exact, t, s.t_exact),
             found_exact=s.found_exact | exact,
             it=s.it + 1,
-        )
-
-    def binned_cond(carry):
-        s, stalled = carry
-        return ((~s.found_exact) & ~stalled & (s.max_in > cap_local)
-                & (s.it < maxit) & (s.yR > s.yL))
+        ), stalled
 
     def binned_body(carry):
         from repro.kernels.ref import bin_edges  # deferred: core <-> kernels
@@ -196,15 +224,21 @@ def local_order_statistic(
         s, stalled = carry
         # realized edges computed ONCE, shared by the local data pass and
         # the narrowing decision (the exactness contract); the cross-device
-        # combine is a psum of the slot-count vector (additive, exactly
-        # like the FG quadruple)
+        # combine is a psum of the slot-measure vector (additive, exactly
+        # like the FG partials) — the slot counts stay local for the
+        # per-shard cap bookkeeping
         edges = bin_edges(s.yL, s.yR, nbins)
-        cnt_loc, _ = ev.local_histogram(edges)
-        cum = jnp.cumsum(_psum(cnt_loc, axes)[:-1])
+        cnt_loc, mass_loc, _ = ev.local_histogram(edges)
+        cum = jnp.cumsum(_psum(mass_loc, axes)[:-1])
         # the narrowing decision + exactness certificates are the one shared
         # implementation in selection.binned_descent_step
         yLn, yRn, _, _, jm1, jstar, hit_lo, exact, stall = \
             selection.binned_descent_step(cum, edges, s.yL, s.yR, kk)
+        # late hit_lo can only be an inexact-mass ulp-flip: fail safe (dead
+        # code on the counting leg — see selection.binned_loop_batched)
+        late_hit_lo = hit_lo & (s.it > 0)
+        exact = exact & ~late_hit_lo
+        stall = stall | late_hit_lo
         # local prefix counts at the chosen edges: the per-shard analogue of
         # the CP loop's le_loc bookkeeping (bounds the local compaction)
         cum_loc = jnp.cumsum(cnt_loc[:-1])
@@ -229,39 +263,74 @@ def local_order_statistic(
         dt = jnp.promote_types(dtype, jnp.float32)
         s0 = s0._replace(yL=s0.yL.astype(dt), yR=s0.yR.astype(dt),
                          t_exact=s0.t_exact.astype(dt))
-        s, _ = jax.lax.while_loop(binned_cond, binned_body,
-                                  (s0, jnp.asarray(False)))
+        body = binned_body
     elif method == "cp":
-        s = jax.lax.while_loop(cond, body, s0)
+        body = cp_body
     else:
         raise ValueError(f"unknown method {method!r}; one of ('binned', "
                          "'cp')")
 
+    s, _ = jax.lax.while_loop(cond, body, (s0, jnp.asarray(False)))
+
     # ---- distributed hybrid finalize (compact per shard, gather, sort) ----
     big = jnp.asarray(jnp.inf, dtype)
     mask_in = (x_local > s.yL) & (x_local <= s.yR)
-    cL = _psum(jnp.sum(x_local <= s.yL, dtype=jnp.int32), axes)
     n_in = _psum(jnp.sum(mask_in, dtype=jnp.int32), axes)
     loc_in = jnp.sum(mask_in, dtype=jnp.int32)
     pos = jnp.cumsum(mask_in.astype(jnp.int32)) - 1
     idx = jnp.where(mask_in, jnp.minimum(pos, cap_local), cap_local)
     z = jnp.full((cap_local + 1,), big, dtype).at[idx].set(
         jnp.where(mask_in, x_local, big))
-    axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
     z_all = z[:cap_local]
     for ax in axes_t:
         z_all = jax.lax.all_gather(z_all, ax).reshape(-1)
-    zs = jax.lax.sort(z_all)
-    ans_sort = zs[jnp.clip(kk - cL - 1, 0, z_all.size - 1)]
-    ok_sort = _pmax(loc_in, axes) <= cap_local
-
+    ok_gather = _pmax(loc_in, axes) <= cap_local
     vnext = _pmin(jnp.min(jnp.where(x_local > s.yL, x_local, big)), axes)
-    n_le_v = _psum(jnp.sum(x_local <= vnext, dtype=jnp.int32), axes)
-    fallback_ok = (cL < kk) & (kk <= n_le_v)
 
+    if weighted:
+        # gather the aligned weight buffers and resolve by sorted prefix
+        # masses — the weighted generalization of indexing at k - cL
+        zw = jnp.zeros((cap_local + 1,), wl.dtype).at[idx].set(
+            jnp.where(mask_in, wl, 0))
+        zw_all = zw[:cap_local]
+        for ax in axes_t:
+            zw_all = jax.lax.all_gather(zw_all, ax).reshape(-1)
+        order = jnp.argsort(z_all)
+        zs = z_all[order]
+        cLm = _psum(jnp.sum(jnp.where(x_local <= s.yL, wl, 0),
+                            dtype=wl.dtype), axes)
+        cumw = cLm + jnp.cumsum(zw_all[order])
+        reach = cumw >= kk
+        ans_sort = zs[jnp.argmax(reach).astype(jnp.int32)]
+        # the buffer certifies only when its total mass actually reaches wk
+        ok_sort = ok_gather & reach[-1]
+        m_le_v = _psum(jnp.sum(jnp.where(x_local <= vnext, wl, 0),
+                               dtype=wl.dtype), axes)
+        m_lt_max = _psum(jnp.sum(jnp.where(x_local < xmax, wl, 0),
+                                 dtype=wl.dtype), axes)
+        # extreme shortcuts gated on the seed bracket (see the engine
+        # finalize: re-measured masses can rounding-flip near wk; only a
+        # bracket still AT the extreme may certify through them)
+        at_min = (cLm >= kk) & (s.yL == xmin)
+        at_max = (m_lt_max < kk) & (s.yR == xmax)
+        t_hit = s.t_exact.astype(dtype)
+        y_hi = s.yR.astype(dtype)
+    else:
+        zs = jax.lax.sort(z_all)
+        cLm = _psum(jnp.sum(x_local <= s.yL, dtype=jnp.int32), axes)
+        ans_sort = zs[jnp.clip(kk - cLm - 1, 0, z_all.size - 1)]
+        ok_sort = ok_gather
+        m_le_v = _psum(jnp.sum(x_local <= vnext, dtype=jnp.int32), axes)
+        m_lt_max = _psum(jnp.sum(x_local < xmax, dtype=jnp.int32), axes)
+        at_min = cLm >= kk
+        at_max = m_lt_max < kk
+        t_hit = s.t_exact
+        y_hi = s.yR
+
+    fallback_ok = (cLm < kk) & (kk <= m_le_v)
     value = jnp.where(
-        s.found_exact, s.t_exact,
-        jnp.where(ok_sort, ans_sort, jnp.where(fallback_ok, vnext, s.yR)),
+        s.found_exact, t_hit,
+        jnp.where(ok_sort, ans_sort, jnp.where(fallback_ok, vnext, y_hi)),
     )
     status = jnp.where(
         s.found_exact, selection.EXACT_HIT,
@@ -269,9 +338,6 @@ def local_order_statistic(
                   jnp.where(fallback_ok, selection.TIE_FALLBACK,
                             selection.NOT_CONVERGED)),
     )
-    n_lt_max = _psum(jnp.sum(x_local < xmax, dtype=jnp.int32), axes)
-    at_min = cL >= kk
-    at_max = n_lt_max < kk
     value = jnp.where(at_min, xmin, jnp.where(at_max, xmax, value))
     status = jnp.where(at_min | at_max, selection.EXACT_HIT, status)
     return selection.SelectResult(
@@ -295,138 +361,16 @@ def local_weighted_order_statistic(
     element whose global cumulative weight reaches ``wk``.  Call inside
     shard_map; weights are sharded exactly like the data.
 
-    Binned rounds only: each round is one local weighted histogram pass +
-    ONE psum of the ``(nbins + 2,)`` slot weight-MASS vector (the
-    narrowing signal); the slot COUNTS stay un-psum'd — they feed the
-    per-shard cap bookkeeping, which must be local.  The bracket shrinks
-    by a factor of ``nbins`` per collective round; the finalize compacts
-    per-shard (value, weight) pairs, all_gathers the tiny buffers and
-    resolves by sorted prefix weights — the weighted analogue of the
-    paper's small-array ``z`` step.
+    Thin wrapper over :func:`local_order_statistic` — the measure swap is
+    the evaluator's ``weights`` leg, not a second round loop: each binned
+    round psums the ``(nbins + 2,)`` slot MASS vector (the slot counts stay
+    per-shard for the cap bookkeeping), and the finalize all_gathers
+    per-shard (value, weight) pair buffers and resolves by sorted prefix
+    weights — the weighted analogue of the paper's small-array ``z`` step.
     """
-    from repro.kernels.ref import bin_edges  # deferred: core <-> kernels
-
-    x_local = x_local.reshape(-1)
-    w_local = jnp.asarray(w_local).reshape(-1)
-    n_local = x_local.size
-    axes_t = _axes_tuple(axes)
-    ev = ShardedEvaluator(x_local, wk, axes, backend=backend,
-                          weights=w_local)
-    wkk = ev.k  # target mass clipped to the global total
-    dtype = x_local.dtype
-    # brackets narrow to realized f32 edge values — keep the bracket state
-    # at (at least) the kernels' f32 accumulation precision
-    dt = jnp.promote_types(dtype, jnp.float32)
-    wl = w_local.astype(wkk.dtype)
-
-    xmin, xmax, _wmean = ev.init_stats()
-
-    s0 = _DistState(
-        yL=xmin.astype(dt),
-        fL=jnp.asarray(0, dt), gL=jnp.asarray(0, dt),   # binned: unused
-        yR=xmax.astype(dt),
-        fR=jnp.asarray(0, dt), gR=jnp.asarray(0, dt),
-        loc_cleL=_pcast_varying(jnp.asarray(0, jnp.int32), axes_t),
-        loc_cleR=_pcast_varying(jnp.asarray(n_local, jnp.int32), axes_t),
-        max_in=jnp.asarray(n_local, jnp.int32),
-        t_exact=jnp.asarray(jnp.nan, dt),
-        found_exact=jnp.asarray(False),
-        it=jnp.asarray(0, jnp.int32),
-    )
-
-    def cond(carry):
-        s, stalled = carry
-        return ((~s.found_exact) & ~stalled & (s.max_in > cap_local)
-                & (s.it < maxit) & (s.yR > s.yL))
-
-    def body(carry):
-        s, stalled = carry
-        # realized edges computed ONCE, shared by the local data pass and
-        # the narrowing decision (the exactness contract); only the slot
-        # MASSES psum — the counts stay per-shard for the cap rule
-        edges = bin_edges(s.yL, s.yR, nbins)
-        cnt_loc, wcnt_loc, _ = ev.local_histogram(edges)
-        cumw = jnp.cumsum(_psum(wcnt_loc, axes)[:-1])
-        yLn, yRn, _, _, jm1, jstar, hit_lo, exact, stall = \
-            selection.binned_descent_step(cumw, edges, s.yL, s.yR, wkk)
-        # late hit_lo can only be an inexact-mass ulp-flip: fail safe (the
-        # engine loop applies the same demotion — see
-        # selection.weighted_binned_loop_batched)
-        late_hit_lo = hit_lo & (s.it > 0)
-        exact = exact & ~late_hit_lo
-        stall = stall | late_hit_lo
-        cum_loc = jnp.cumsum(cnt_loc[:-1])
-        locL, locR = cum_loc[jm1], cum_loc[jstar]
-        upd = ~exact & ~stall
-        loc_cleL = jnp.where(upd, locL, s.loc_cleL)
-        loc_cleR = jnp.where(upd, locR, s.loc_cleR)
-        return _DistState(
-            yL=jnp.where(upd, yLn, s.yL), fL=s.fL, gL=s.gL,
-            yR=jnp.where(upd, yRn, s.yR), fR=s.fR, gR=s.gR,
-            loc_cleL=loc_cleL, loc_cleR=loc_cleR,
-            max_in=_pmax(loc_cleR - loc_cleL, axes),
-            t_exact=jnp.where(exact, jnp.where(hit_lo, s.yL, yRn),
-                              s.t_exact),
-            found_exact=s.found_exact | exact,
-            it=s.it + 1,
-        ), stalled | stall
-
-    s, _ = jax.lax.while_loop(cond, body, (s0, jnp.asarray(False)))
-
-    # ---- weighted distributed finalize: compact pairs, gather, sort ----
-    big = jnp.asarray(jnp.inf, dtype)
-    mask_in = (x_local > s.yL) & (x_local <= s.yR)
-    cLw = _psum(jnp.sum(jnp.where(x_local <= s.yL, wl, 0),
-                        dtype=wl.dtype), axes)
-    n_in = _psum(jnp.sum(mask_in, dtype=jnp.int32), axes)
-    loc_in = jnp.sum(mask_in, dtype=jnp.int32)
-    pos = jnp.cumsum(mask_in.astype(jnp.int32)) - 1
-    idx = jnp.where(mask_in, jnp.minimum(pos, cap_local), cap_local)
-    z = jnp.full((cap_local + 1,), big, dtype).at[idx].set(
-        jnp.where(mask_in, x_local, big))
-    zw = jnp.zeros((cap_local + 1,), wl.dtype).at[idx].set(
-        jnp.where(mask_in, wl, 0))
-    z_all, zw_all = z[:cap_local], zw[:cap_local]
-    for ax in axes_t:
-        z_all = jax.lax.all_gather(z_all, ax).reshape(-1)
-        zw_all = jax.lax.all_gather(zw_all, ax).reshape(-1)
-    order = jnp.argsort(z_all)
-    zs = z_all[order]
-    cumw = cLw + jnp.cumsum(zw_all[order])
-    reach = cumw >= wkk
-    sidx = jnp.argmax(reach).astype(jnp.int32)
-    ans_sort = zs[sidx]
-    ok_sort = (_pmax(loc_in, axes) <= cap_local) & reach[-1]
-
-    vnext = _pmin(jnp.min(jnp.where(x_local > s.yL, x_local, big)), axes)
-    w_le_v = _psum(jnp.sum(jnp.where(x_local <= vnext, wl, 0),
-                           dtype=wl.dtype), axes)
-    fallback_ok = (cLw < wkk) & (wkk <= w_le_v)
-
-    value = jnp.where(
-        s.found_exact, s.t_exact.astype(dtype),
-        jnp.where(ok_sort, ans_sort, jnp.where(fallback_ok, vnext,
-                                               s.yR.astype(dtype))),
-    )
-    status = jnp.where(
-        s.found_exact, selection.EXACT_HIT,
-        jnp.where(ok_sort, selection.HYBRID_SORT,
-                  jnp.where(fallback_ok, selection.TIE_FALLBACK,
-                            selection.NOT_CONVERGED)),
-    )
-    w_lt_max = _psum(jnp.sum(jnp.where(x_local < xmax, wl, 0),
-                             dtype=wl.dtype), axes)
-    # extreme shortcuts gated on the seed bracket (see the engine finalize:
-    # re-measured masses can rounding-flip near wk; only a bracket still AT
-    # the extreme may certify through them)
-    at_min = (cLw >= wkk) & (s.yL == xmin)
-    at_max = (w_lt_max < wkk) & (s.yR == xmax)
-    value = jnp.where(at_min, xmin, jnp.where(at_max, xmax, value))
-    status = jnp.where(at_min | at_max, selection.EXACT_HIT, status)
-    return selection.SelectResult(
-        value=value, iters=s.it, status=status.astype(jnp.int32),
-        y_lo=s.yL, y_hi=s.yR, n_in=n_in,
-    )
+    return local_order_statistic(
+        x_local, wk, axes, maxit=maxit, cap_local=cap_local,
+        backend=backend, method="binned", nbins=nbins, weights=w_local)
 
 
 def sharded_order_statistic(
@@ -554,9 +498,12 @@ def axis_evaluator(v_local: jax.Array, k, axes: AxisNames) -> FnEvaluator:
         # v == -inf), matching the kernels' slot layout
         first = jnp.arange(edges.shape[-1] + 1) == 0
         m = ((v[..., None] > lower) | first) & (v[..., None] <= upper)
-        # counts only: the engine's binned descent never reads the sums
-        # here, and psumming them would double the wire bytes for nothing
-        return _psum(m.astype(jnp.int32), axes_t), None
+        # the counting measure: the psum'd counts serve as both the count
+        # and the mass vector; the per-bin sums stay None (psumming them
+        # would double the wire bytes, and the across-axis regime never
+        # runs the polish)
+        cnt = _psum(m.astype(jnp.int32), axes_t)
+        return cnt, cnt, None
 
     def init_stats():
         return (_pmin(v, axes_t), _pmax(v, axes_t),
@@ -608,7 +555,6 @@ def order_statistic_across_axis(
     resolution matters.
     """
     axes_t = _axes_tuple(axes)
-    n_rep = _psum(jnp.asarray(1, jnp.int32), axes_t)
 
     if method == "auto":
         # lax.psum of a python int constant-folds to the (static) axis size

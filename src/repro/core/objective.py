@@ -26,9 +26,37 @@ where ``n_lt = count(x < y)`` and ``n_le = count(x <= y)``.  Crucially
 
 so the counts both drive the optimizer *and* certify exactness.  Everything
 in this module is a single fused read-only pass over ``x`` (the paper's
-``transform_reduce``), which is what makes the method shard-friendly: partial
-``(sum_pos, sum_neg, n_lt, n_le)`` quadruples combine additively across
-devices (psum of four scalars).
+``transform_reduce``), which is what makes the method shard-friendly: the
+partial sums combine additively across devices (one psum per iteration).
+
+The Measure abstraction (one engine for counts and weights)
+-----------------------------------------------------------
+Selection and *weighted* selection are the same convex program under two
+measures on the data:
+
+* the **counting measure** — every element has mass 1, the target is the
+  integer rank ``k``, and every mass comparison is an exact int32
+  comparison;
+* a **weight measure** ``w_i >= 0`` — the target is a cumulative mass
+  ``wk`` (the minimizer of ``F_w(y) = sum_i w_i * rho(x_i - y)``), and
+  masses accumulate in floating point.
+
+Every pivot evaluation therefore returns ONE partials type, :class:`FG`,
+carrying the measure below / at-or-below the pivot (``m_lt`` / ``m_le`` —
+int32 counts on the counting path, fp masses on the weighted path) next to
+the integer element counts ``n_lt`` / ``n_le`` that always ride along
+(buffer capacity is an element count, so the engine's cap-based stopping
+rule is measure-independent).  The engine's move / exact-hit decisions
+compare ``m_*`` against the target measure ``k``:
+
+    m_lt(y) < k <= m_le(y)   <=>   y is the (weighted) order statistic
+
+(on the weighted path ``m_lt < m_le`` forces positive mass AT ``y``, so a
+certified pivot is a data element).  Uniform weights with ``wk = k`` make
+every mass comparison an exact integer-valued comparison, reproducing the
+counting path bit for bit — counts are the exact-measure specialization,
+not a separate engine.  The counting path stays on the four-partial kernels
+(``m_*`` aliases ``n_*``; no weights array is read from HBM).
 
 Evaluator contract (the batched-first engine's only data interface)
 -------------------------------------------------------------------
@@ -38,10 +66,12 @@ answers one question per iteration:
 
     evaluator(y: (B,) pivots) -> FG with (B,) fields
 
-plus the initial statistics ``init_stats() -> (xmin, xmax, xmean)`` (each
-``(B,)``) and the static attributes ``n`` (elements per problem, ``(B,)`` or
-scalar) and ``k`` (target ranks, ``(B,)``).  Anything that can produce the
-four additive partials per pivot is a valid evaluator:
+plus the initial statistics ``init_stats() -> (xmin, xmax, mean)`` (each
+``(B,)``; the mean is mass-weighted on the weighted path) and the static
+attributes ``n`` (elements per problem), ``k`` (target measure: int32 ranks
+or fp masses, ``(B,)``) and ``weighted`` (which leg the evaluator runs).
+Anything that can produce the additive partials per pivot is a valid
+evaluator:
 
 * :class:`RowsEvaluator`    — ``(B, n)`` rows, per-row pivot (independent
   problems: coordinate-wise medians, per-start LMS/LTS criteria, kNN rows);
@@ -49,7 +79,7 @@ four additive partials per pivot is a valid evaluator:
   ``multi_order_statistic``); backed by the multi-pivot Pallas kernel that
   reads each ``x`` tile into VMEM once and emits partials for all K pivots;
 * :class:`ShardedEvaluator` — the data lives sharded across a mesh axis; the
-  local fused pass is combined by a ``psum`` of the four partials (the
+  local fused pass is combined by a ``psum`` of the additive partials (the
   paper's multi-GPU combine, see :mod:`repro.core.distributed`).
 
 Scalar selection is just the ``B=1`` view of the rows regime.
@@ -63,13 +93,28 @@ import jax.numpy as jnp
 
 
 class FG(NamedTuple):
-    """Objective value, subdifferential interval and counts at a pivot."""
+    """Objective value, subdifferential interval and measure at a pivot.
 
-    f: jax.Array      # objective value (normalized by n)
+    The single partials type of the unified engine: ``m_lt`` / ``m_le``
+    carry the MEASURE below / at-or-below the pivot — int32 counts on the
+    counting path (where they alias ``n_lt`` / ``n_le``), fp weight masses
+    on the weighted path — and drive every move / exact-hit decision.  The
+    int32 element counts ``n_lt`` / ``n_le`` always ride along: buffer
+    capacity is an element count, so the cap-based stopping rule reads them
+    on both legs.
+    """
+
+    f: jax.Array      # objective value (normalized by the total measure)
     g_lo: jax.Array   # left one-sided derivative
     g_hi: jax.Array   # right one-sided derivative
-    n_lt: jax.Array   # count(x <  y), int32
+    m_lt: jax.Array   # measure(x <  y) — drives narrowing + certificates
+    m_le: jax.Array   # measure(x <= y)
+    n_lt: jax.Array   # count(x <  y), int32 — drives the cap stopping rule
     n_le: jax.Array   # count(x <= y), int32
+
+
+# Backwards-compatible alias: the weighted septuple IS the unified type.
+WFG = FG
 
 
 def os_weights(n, k, dtype=jnp.float32):
@@ -97,7 +142,12 @@ def eval_partials(x: jax.Array, y: jax.Array):
 
 
 def fg_from_partials(partials, n, k) -> FG:
-    """Combine additive partials into the FG quintuple."""
+    """Combine the four counting-measure partials into the unified FG.
+
+    The measure fields alias the integer counts (counts ARE the measure on
+    this leg), so every downstream mass comparison is an exact int32
+    comparison.
+    """
     sum_pos, sum_neg, n_lt, n_le = partials
     alpha, beta = os_weights(n, k, sum_pos.dtype)
     nf = jnp.asarray(n, sum_pos.dtype)
@@ -108,7 +158,8 @@ def fg_from_partials(partials, n, k) -> FG:
     # derivative counts ties as "above" and the right derivative as "below".
     g_lo = alpha * n_ltf / nf - beta * (nf - n_ltf) / nf
     g_hi = alpha * n_lef / nf - beta * (nf - n_lef) / nf
-    return FG(f=f, g_lo=g_lo, g_hi=g_hi, n_lt=n_lt, n_le=n_le)
+    return FG(f=f, g_lo=g_lo, g_hi=g_hi, m_lt=n_lt, m_le=n_le,
+              n_lt=n_lt, n_le=n_le)
 
 
 def eval_fg(x: jax.Array, y: jax.Array, k) -> FG:
@@ -122,47 +173,14 @@ def eval_fg_batched(x: jax.Array, y: jax.Array, k) -> FG:
     return b_eval(x, y, jnp.broadcast_to(jnp.asarray(k), (x.shape[0],)))
 
 
-# ---------------------------------------------------------------------------
-# Weighted objective: F_w(y) = sum_i w_i * rho(x_i - y)
-# ---------------------------------------------------------------------------
-#
-# The minimizer of the weighted objective is the weighted order statistic —
-# the smallest element v with cumulative weight W_le(v) = sum(w_i : x_i <= v)
-# reaching the target mass ``wk``.  Everything mirrors the unweighted story
-# with counts replaced by weight MASS: choosing the slopes
-#
-#     alpha = (W - wk) / W,   beta = wk / W        (W = total weight)
-#
-# puts the subdifferential zero-crossing exactly at mass wk, and the
-# normalized one-sided derivatives collapse to
-#
-#     g_lo(y) = (W_lt(y) - wk) / W,   g_hi(y) = (W_le(y) - wk) / W,
-#
-# so the element-hit certificate is the mass invariant
-#
-#     W_lt(y) < wk <= W_le(y)   <=>   y is the weighted order statistic
-#
-# (W_lt < W_le forces positive mass AT y, i.e. y is a data element).  The
-# integer counts still ride along: buffer capacity is an element COUNT, so
-# the engine's cap-based stopping rule keeps using n_lt/n_le while the
-# narrowing and certificates use the masses.  Uniform weights w_i = 1 with
-# wk = k reproduce the unweighted decisions exactly (mass == count).
+def wfg_from_partials(partials, W, wk) -> FG:
+    """Combine the six weight-measure partials into the unified FG.
 
-
-class WFG(NamedTuple):
-    """Weighted objective value, subdifferential and masses at a pivot."""
-
-    f: jax.Array      # objective value (normalized by total weight W)
-    g_lo: jax.Array   # left one-sided derivative
-    g_hi: jax.Array   # right one-sided derivative
-    w_lt: jax.Array   # mass(x <  y) — drives narrowing + certificates
-    w_le: jax.Array   # mass(x <= y)
-    n_lt: jax.Array   # count(x <  y), int32 — drives the cap stopping rule
-    n_le: jax.Array   # count(x <= y), int32
-
-
-def wfg_from_partials(partials, W, wk) -> WFG:
-    """Combine the six additive weighted partials into the WFG septuple."""
+    Choosing the slopes ``alpha = (W - wk)/W`` and ``beta = wk/W`` puts the
+    subdifferential zero-crossing of ``F_w(y) = sum_i w_i * rho(x_i - y)``
+    exactly at mass ``wk``, and the normalized one-sided derivatives
+    collapse to ``g_lo = (W_lt - wk)/W`` and ``g_hi = (W_le - wk)/W``.
+    """
     wsum_pos, wsum_neg, w_lt, w_le, n_lt, n_le = partials
     dt = wsum_pos.dtype
     Wf = jnp.asarray(W, dt)
@@ -172,8 +190,8 @@ def wfg_from_partials(partials, W, wk) -> WFG:
     f = (beta * wsum_pos + alpha * wsum_neg) / Wf
     g_lo = (w_lt - wkf) / Wf
     g_hi = (w_le - wkf) / Wf
-    return WFG(f=f, g_lo=g_lo, g_hi=g_hi, w_lt=w_lt, w_le=w_le,
-               n_lt=n_lt, n_le=n_le)
+    return FG(f=f, g_lo=g_lo, g_hi=g_hi, m_lt=w_lt, m_le=w_le,
+              n_lt=n_lt, n_le=n_le)
 
 
 # ---------------------------------------------------------------------------
@@ -184,33 +202,46 @@ def wfg_from_partials(partials, W, wk) -> WFG:
 class Evaluator(Protocol):
     """Batched pivot evaluation: pivots ``(B,)`` -> :class:`FG` with ``(B,)``
     fields.  ``n`` is the per-problem element count (``(B,)`` or scalar),
-    ``k`` the 1-indexed target ranks ``(B,)``.  ``init_stats`` returns
-    per-problem ``(min, max, mean)`` — one extra fused pass, used to seat the
-    initial bracket and cutting planes analytically.
+    ``k`` the target measure ``(B,)`` — 1-indexed int32 ranks on the
+    counting leg, fp cumulative masses on the weighted leg (``weighted``
+    says which).  ``init_stats`` returns per-problem ``(min, max, mean)`` —
+    one extra fused pass, used to seat the initial bracket and cutting
+    planes analytically (the mean is mass-weighted on the weighted leg).
 
     ``histogram`` is the binned data pass behind ``method='binned'``: per
     problem, bin the data against the caller-supplied REALIZED bracket
     edges ``(B, nbins + 1)`` (built once per sweep by the engine via
     ``kernels.ref.bin_edges`` — implementations must only COMPARE against
     them, never recompute edge arithmetic) and return additive
-    ``(count, sum)`` slot vectors of shape ``(B, nbins + 2)`` (slot layout
-    documented in ``kernels.ref.cp_histogram_ref``).  One sweep narrows
-    every live bracket by a factor of ``nbins`` — log2(nbins)
-    bisection-equivalents per data pass — and, like the FG quadruple, the
-    slot vectors combine additively across blocks/shards (a psum of
-    ``nbins + 2`` ints per problem is the whole multi-device story).  The
-    engine only reads the counts; implementations whose transport makes
-    the sums costly (the distributed evaluators) may return ``None`` in
-    their place."""
+    ``(cnt, mass, msum)`` slot vectors of shape ``(B, nbins + 2)`` (slot
+    layout documented in ``kernels.ref.cp_histogram_ref``):
+
+    * ``cnt``  — int32 element counts (feed the cap-based stopping rule);
+    * ``mass`` — the per-slot measure (the narrowing signal; on the
+      counting leg this IS ``cnt``, returned aliased — no extra compute);
+    * ``msum`` — per-slot ``sum(w_i * x_i)`` (``sum(x_i)`` on the counting
+      leg) — the in-bin CP-polish ingredient.  Implementations whose
+      transport makes the sums costly (the distributed evaluators) may
+      return ``None`` in its place; such evaluators cannot drive the
+      polish.
+
+    One sweep narrows every live bracket by a factor of ``nbins`` —
+    log2(nbins) bisection-equivalents per data pass — and, like the FG
+    partials, the slot vectors combine additively across blocks/shards (a
+    psum of ``nbins + 2`` scalars per problem is the whole multi-device
+    story)."""
 
     n: jax.Array
     k: jax.Array
+    weighted: bool
 
     def __call__(self, y: jax.Array) -> FG: ...
 
     def init_stats(self) -> tuple[jax.Array, jax.Array, jax.Array]: ...
 
-    def histogram(self, edges: jax.Array) -> tuple[jax.Array, jax.Array]: ...
+    def histogram(
+        self, edges: jax.Array
+    ) -> tuple[jax.Array, jax.Array, Optional[jax.Array]]: ...
 
 
 def _weight_accum_dtype(x, w):
@@ -231,9 +262,9 @@ class RowsEvaluator:
 
     The optional weights leg: with ``weights`` (B, n), ``k`` is reinterpreted
     as the per-row TARGET CUMULATIVE MASS ``wk`` (float, clipped to the
-    row's total weight ``W``), ``__call__`` returns :class:`WFG` and
-    ``histogram`` the weighted ``(cnt, wcnt, wsum)`` slot triple — the
-    weighted engine loops in :mod:`repro.core.selection` consume both.
+    row's total weight ``W``), the partials carry weight masses in the
+    measure fields, and ``histogram`` binning emits the weighted
+    ``(cnt, mass, msum)`` slot triple.
     """
 
     def __init__(self, x: jax.Array, k, *, backend: str | None = None,
@@ -260,7 +291,7 @@ class RowsEvaluator:
             self._partials = lambda y: kops.fused_partials_batched(
                 x, y, backend=backend)
 
-    def __call__(self, y: jax.Array):
+    def __call__(self, y: jax.Array) -> FG:
         if self.weighted:
             return wfg_from_partials(self._partials(y), self.W, self.k)
         return fg_from_partials(self._partials(y), self.n, self.k)
@@ -269,8 +300,9 @@ class RowsEvaluator:
         if self.weighted:
             return self._kops.fused_weighted_histogram_batched(
                 self.x, self.w, edges, backend=self._backend)
-        return self._kops.fused_histogram_batched(
+        cnt, bsum = self._kops.fused_histogram_batched(
             self.x, edges, backend=self._backend)
+        return cnt, cnt, bsum  # counting measure: the counts ARE the mass
 
     def init_stats(self):
         x = self.x
@@ -314,7 +346,7 @@ class SharedEvaluator:
             self._partials = lambda y: kops.fused_partials_multi(
                 x, y, backend=backend)
 
-    def __call__(self, y: jax.Array):
+    def __call__(self, y: jax.Array) -> FG:
         if self.weighted:
             return wfg_from_partials(self._partials(y), self.W, self.k)
         return fg_from_partials(self._partials(y), self.n, self.k)
@@ -323,8 +355,9 @@ class SharedEvaluator:
         if self.weighted:
             return self._kops.fused_weighted_histogram_multi(
                 self.x, self.w, edges, backend=self._backend)
-        return self._kops.fused_histogram_multi(
+        cnt, bsum = self._kops.fused_histogram_multi(
             self.x, edges, backend=self._backend)
+        return cnt, cnt, bsum  # counting measure: the counts ARE the mass
 
     def init_stats(self):
         x, b = self.x, self.k.shape[0]
@@ -342,7 +375,7 @@ class ShardedEvaluator:
     """Data sharded over mesh axis/axes: local fused pass + psum combine.
 
     ``B = 1`` view (scalar pivot broadcast from the engine's (1,) state) —
-    the psum of the four additive partials IS the cross-device combine; no
+    the psum of the additive partials IS the cross-device combine; no
     data moves.  Must be constructed inside ``shard_map``.
     """
 
@@ -370,39 +403,44 @@ class ShardedEvaluator:
             self._partials1 = lambda y: kops.fused_partials(
                 x_local, y, backend=backend)
 
-    def __call__(self, y: jax.Array):
+    def __call__(self, y: jax.Array) -> FG:
         return self.combine(self._partials1(y))
 
     def local_histogram(self, edges):
-        """This shard's un-psum'd slot vectors (shape ``(nbins + 2,)``) —
-        the binned analogue of :meth:`local_partials`; the distributed
-        binned loop bounds the PER-SHARD in-bracket count from these.
-        Weighted leg: the ``(cnt, wcnt, wsum)`` triple."""
+        """This shard's un-psum'd ``(cnt, mass, msum)`` slot triple (shape
+        ``(nbins + 2,)`` each) — the binned analogue of
+        :meth:`local_partials`; the distributed binned loop bounds the
+        PER-SHARD in-bracket count from the local counts while the psum of
+        the mass vector drives the narrowing."""
         if self.weighted:
             return self._kops.fused_weighted_histogram(
                 self.x_local, self.w_local, edges, backend=self._backend)
-        return self._kops.fused_histogram(
+        cnt, bsum = self._kops.fused_histogram(
             self.x_local, edges, backend=self._backend)
+        return cnt, cnt, bsum  # counting measure: the counts ARE the mass
 
     def histogram(self, edges):
         """Binned pass over the GLOBAL array: local histogram + one psum of
-        the ``(nbins + 2,)`` count vector — additive across shards exactly
-        like the FG quadruple (B = 1 view: ``(nbins + 1,)`` edges).  The
-        per-bin sums are returned un-psum'd as ``None``: the binned engine
-        never reads them, and psumming them would double the wire bytes.
-        Weighted leg: the mass vector psums next to the counts (the wire
-        carries ``2 * (nbins + 2)`` scalars, still no data movement)."""
+        the ``(nbins + 2,)`` mass vector — additive across shards exactly
+        like the FG partials (B = 1 view: ``(nbins + 1,)`` edges).  On the
+        counting leg the psum'd counts serve as both ``cnt`` and ``mass``
+        (one vector on the wire); the weighted leg psums the mass vector
+        next to the counts (``2 * (nbins + 2)`` scalars, still no data
+        movement).  The per-bin sums return as ``None``: psumming them
+        would pay wire bytes the remote binned loop never reads (the
+        distributed regime keeps uniform edges)."""
         if self.weighted:
             cnt, wcnt, _wsum = self.local_histogram(edges)
             return (jax.lax.psum(cnt, self.axes),
                     jax.lax.psum(wcnt, self.axes), None)
-        cnt, _bsum = self.local_histogram(edges)
-        return jax.lax.psum(cnt, self.axes), None
+        cnt, _, _bsum = self.local_histogram(edges)
+        c = jax.lax.psum(cnt, self.axes)
+        return c, c, None
 
     def local_partials(self, y: jax.Array):
-        """This shard's un-psum'd quadruple (for shard-local bookkeeping —
-        the distributed hybrid finalize bounds the PER-SHARD in-bracket
-        count, see ``distributed.local_order_statistic``)."""
+        """This shard's un-psum'd additive partials (for shard-local
+        bookkeeping — the distributed hybrid finalize bounds the PER-SHARD
+        in-bracket count, see ``distributed.local_order_statistic``)."""
         return self._partials1(y)
 
     def combine(self, partials):
@@ -443,13 +481,13 @@ class FnEvaluator:
     distributed across-axis solver, where the combine is a per-coordinate
     psum, and by tests that drive the engine through a custom backend.
 
-    ``histogram(edges) -> (cnt, bsum)`` (edges ``(B, nbins + 1)``, outputs
-    ``(B, nbins + 2)``) is optional; without it the evaluator only drives
-    the FG methods.
+    ``histogram(edges) -> (cnt, mass, msum)`` (edges ``(B, nbins + 1)``,
+    outputs ``(B, nbins + 2)``; ``msum`` may be ``None``) is optional;
+    without it the evaluator only drives the FG methods.
 
     Weighted leg: with ``weights_total=W`` the ``partials`` closure must
     return the six weighted partials, ``k`` is the target mass ``wk``, and
-    ``histogram`` (if given) the ``(cnt, wcnt, wsum)`` triple — the closure
+    the histogram triple carries the weighted slot masses — the closure
     owns whatever transport (psum, multi-leaf reduction) produces them."""
 
     def __init__(self, partials: Callable, n, k, init_stats: Callable,
@@ -463,7 +501,7 @@ class FnEvaluator:
         self.weighted = weights_total is not None
         self.W = weights_total
 
-    def __call__(self, y: jax.Array):
+    def __call__(self, y: jax.Array) -> FG:
         if self.weighted:
             return wfg_from_partials(self._partials(y), self.W, self.k)
         return fg_from_partials(self._partials(y), self.n, self.k)

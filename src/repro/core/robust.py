@@ -220,13 +220,15 @@ class TheilSenFit(NamedTuple):
     theta: jax.Array        # (2,) = [intercept, slope]
 
 
-@functools.partial(jax.jit, static_argnames=("weighting", "method"))
+@functools.partial(jax.jit, static_argnames=("weighting", "method",
+                                             "max_pairs"))
 def theil_sen_fit(x, y, *, weighting: str = "sen",
-                  method: Optional[str] = None) -> TheilSenFit:
+                  method: Optional[str] = None,
+                  max_pairs: Optional[int] = None) -> TheilSenFit:
     """Theil-Sen simple regression via the weighted median of pairwise
     slopes.
 
-    All n^2 pairwise slopes ride ONE weighted selection (degenerate pairs
+    All pairwise slopes ride ONE weighted selection (degenerate pairs
     ``x_i == x_j`` get weight 0, so they never influence the mass target);
     ``weighting='sen'`` weights each slope by ``|x_j - x_i|`` (Sen 1968's
     variance-reducing choice — a long-baseline pair estimates the slope
@@ -235,14 +237,38 @@ def theil_sen_fit(x, y, *, weighting: str = "sen",
     at the fitted slope.  Breakdown ~29%: the acceptance bar is exact slope
     recovery at 30% random contamination, where OLS is destroyed.
 
-    O(n^2) memory for the slope matrix — intended for the paper-scale
-    regression workloads (n up to a few thousand); beyond that, subsample
-    pairs before calling.
+    ``max_pairs=None`` materializes the full (n, n) slope matrix — fine for
+    the paper-scale regression workloads (n up to a few thousand).  For
+    larger n pass ``max_pairs``: slopes are generated in a BLOCKED
+    offset-strided layout — ``p = max_pairs // n`` cyclic offsets ``d``
+    spread over ``1..n-1``, pairing every ``x_i`` with ``x_{(i+d) mod n}``
+    into a ``(p, n)`` block — O(max_pairs) memory, no (n, n) anywhere.
+    Each offset contributes every index once, so the subsample is balanced
+    (every observation appears in exactly ``2p`` pairs); with
+    ``max_pairs >= n*(n-1)`` the offsets enumerate EVERY ordered pair
+    exactly once, which has the same (slope, weight) multiset as the full
+    matrix (whose diagonal carries weight 0) — the two modes then agree
+    exactly, which is the property the tests pin on small n.
     """
     x = jnp.asarray(x).reshape(-1)
     y = jnp.asarray(y).reshape(-1)
-    dx = x[None, :] - x[:, None]
-    dy = y[None, :] - y[:, None]
+    n = x.shape[0]
+    # blocked whenever it is no larger than the full (n, n) materialization
+    # — max_pairs == n*(n-1) then yields offsets 1..n-1 (every ordered
+    # pair), the exact-equality regime the parity tests pin
+    if max_pairs is not None and n > 2 and max_pairs < n * n:
+        import numpy as np  # static offset schedule (n, max_pairs static)
+
+        p = int(max(1, min(n - 1, max_pairs // n)))
+        offsets = np.unique(
+            np.round(np.linspace(1, n - 1, p)).astype(np.int64))
+        idx = (jnp.arange(n)[None, :]
+               + jnp.asarray(offsets)[:, None]) % n     # (p, n)
+        dx = x[idx] - x[None, :]
+        dy = y[idx] - y[None, :]
+    else:
+        dx = x[None, :] - x[:, None]
+        dy = y[None, :] - y[:, None]
     valid = dx != 0
     slopes = jnp.where(valid, dy / jnp.where(valid, dx, 1.0), 0.0)
     if weighting == "sen":

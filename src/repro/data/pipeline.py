@@ -16,8 +16,6 @@ from typing import Iterator, Optional
 
 import numpy as np
 
-import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
 

@@ -3,15 +3,21 @@
 This is the compute hot-spot of the paper — the GPU code's
 ``thrust::transform_reduce`` (Fig. 1), executed ``maxit`` times per
 selection.  On TPU we tile the array HBM -> VMEM in ``(block_rows, 128)``
-blocks and emit *per-block partials*
+blocks and emit *per-block partials* for the pivot(s) ``y``.  Partials are
+combined by a tiny tree-reduce outside the kernel (parallel across
+MegaCore, no cross-grid accumulation races); they are additive, which is
+exactly what makes the paper's method shard-friendly: the same vectors are
+psum'd across chips in ``core.distributed``.
 
-    (sum_pos, sum_neg)  f32   and   (n_lt, n_le)  i32
-
-for the pivot ``y``.  Partials are combined by a tiny tree-reduce outside the
-kernel (parallel across MegaCore, no cross-grid accumulation races).  The
-four partials are additive, which is exactly what makes the paper's method
-shard-friendly: the same quadruple is psum'd across chips in
-``core.distributed``.
+ONE kernel family serves both measures (see ``core.objective``): every
+body shares the tile prologue (HBM tile fetch + f32 cast + tail mask) and
+the per-tile accumulators in :func:`_fg_tile` / :func:`_bin_tile`; the
+weights leg is a static specialization that rides a second tile stream and
+two extra mass accumulators.  The counting leg keeps its SMALLER partial
+vectors — two f32 sums + two i32 counts per pivot, and no weights array
+read from HBM at all (the specialization is resolved at trace time, so the
+unweighted kernels are byte-identical in memory traffic to the
+pre-unification ones).
 
 Counts are carried as int32 (f32 mantissa overflows beyond 2^24 elements —
 the paper's n reaches 1.34e8).
@@ -22,7 +28,10 @@ Layout notes (TPU-native, not a CUDA port):
     comfortably inside ~16 MiB VMEM with double buffering;
   * the pivot ``y`` is an SMEM scalar (prefetched, uniform across the tile);
   * masking by global element index handles the tail block, so any ``n``
-    is supported without host-side padding corrections.
+    is supported without host-side padding corrections;
+  * scalar (one-pivot) entry points are the K=1 view of the multi-pivot
+    kernels — same tile reductions, same block tree-reduce, one less body
+    to tune.
 """
 from __future__ import annotations
 
@@ -69,28 +78,296 @@ def _valid_mask(b, shape, n, block_rows):
     return (b * block_rows + rows) * LANES + cols < n
 
 
-def _partials_kernel(y_ref, x_ref, fsum_ref, cnt_ref, *, n, block_rows):
-    b = pl.program_id(0)
-    y = y_ref[0]
-    x = x_ref[...].astype(jnp.float32)  # (block_rows, LANES)
-    valid = _valid_mask(b, x.shape, n, block_rows)
+# ---------------------------------------------------------------------------
+# Shared per-tile accumulators (the single implementation of both measures)
+# ---------------------------------------------------------------------------
 
+
+def _fg_tile(x, valid, y, w=None):
+    """Per-tile additive FG partials for one pivot.
+
+    Counting leg (``w=None``): ``((sum_pos, sum_neg), (n_lt, n_le))``.
+    Weights leg: ``((wsum_pos, wsum_neg, w_lt, w_le), (n_lt, n_le))`` — the
+    weighted objective terms and the weight masses below / at-or-below the
+    pivot; the integer counts ride along on both legs (they drive the
+    engine's cap-based stopping rule).
+    """
     d = x - y
     zero = jnp.zeros_like(x)
-    sum_pos = jnp.sum(jnp.where(valid & (d > 0), d, zero))
-    sum_neg = jnp.sum(jnp.where(valid & (d < 0), -d, zero))
-    lt = jnp.sum(jnp.where(valid & (d < 0), 1, 0).astype(jnp.int32))
-    le = jnp.sum(jnp.where(valid & (d <= 0), 1, 0).astype(jnp.int32))
+    if w is None:
+        fsums = (jnp.sum(jnp.where(valid & (d > 0), d, zero)),
+                 jnp.sum(jnp.where(valid & (d < 0), -d, zero)))
+    else:
+        fsums = (jnp.sum(jnp.where(valid & (d > 0), w * d, zero)),
+                 jnp.sum(jnp.where(valid & (d < 0), -w * d, zero)),
+                 jnp.sum(jnp.where(valid & (d < 0), w, zero)),
+                 jnp.sum(jnp.where(valid & (d <= 0), w, zero)))
+    cnts = (jnp.sum(jnp.where(valid & (d < 0), 1, 0).astype(jnp.int32)),
+            jnp.sum(jnp.where(valid & (d <= 0), 1, 0).astype(jnp.int32)))
+    return fsums, cnts
 
-    fsum_ref[0, 0] = sum_pos
-    fsum_ref[0, 1] = sum_neg
-    cnt_ref[0, 0] = lt
-    cnt_ref[0, 1] = le
+
+def _bin_tile(x, valid, lower, upper, w=None):
+    """Per-tile slot partials for one bracket's ``(nbins + 2,)`` bounds.
+
+    Counting leg: ``(cnt, bsum)``; weights leg: ``(cnt, wcnt, wsum)`` —
+    per-slot element count, weight mass and ``sum(w*x)``.  The one-hot
+    membership intermediate is ``(block_rows, LANES, nbins + 2)`` — callers
+    bound ``block_rows`` accordingly (DEF_HIST_BLOCK_ROWS).
+    """
+    nslots = lower.shape[-1]
+    j = jax.lax.broadcasted_iota(jnp.int32, (1, 1, nslots), 2)
+    lo3 = lower.reshape(1, 1, nslots)
+    up3 = upper.reshape(1, 1, nslots)
+    x3 = x[:, :, None]
+    # slot 0 has no lower bound — `x > -inf` would drop x == -inf, so the
+    # first slot escapes the strict lower test (keeps sum(cnt) == n and
+    # parity with the searchsorted oracle)
+    m = valid[:, :, None] & ((x3 > lo3) | (j == 0)) & (x3 <= up3)
+    cnt = jnp.sum(m.astype(jnp.int32), axis=(0, 1))
+    if w is None:
+        return (cnt, jnp.sum(jnp.where(m, x3, jnp.float32(0.0)),
+                             axis=(0, 1)))
+    w3 = w[:, :, None]
+    wcnt = jnp.sum(jnp.where(m, w3, jnp.float32(0.0)), axis=(0, 1))
+    wsum = jnp.sum(jnp.where(m, w3 * x3, jnp.float32(0.0)), axis=(0, 1))
+    return (cnt, wcnt, wsum)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("block_rows", "interpret")
-)
+# ---------------------------------------------------------------------------
+# Kernel bodies: one multi-pivot + one row-batched body per pass kind, each
+# statically specialized on the weights leg (the extra tile stream and
+# wider partial vector exist only when weighted=True)
+# ---------------------------------------------------------------------------
+
+
+def _fg_kernel_multi(y_ref, *refs, n, npiv, block_rows, weighted):
+    """One x (or x/w) tile, ALL K pivots: the tile is read HBM -> VMEM once
+    and the K per-pivot partial vectors are computed from registers/VMEM —
+    K× less HBM traffic than K independent passes (the win behind shared-x
+    batched selection: a quantile set costs one sweep per iteration, not
+    K).  K is static (the pivot vector's shape), so the pivot loop is
+    unrolled at trace time; all stores use static indices.  Scalar
+    ``cp_partials`` / ``wcp_partials`` are the K=1 view."""
+    b = pl.program_id(0)
+    if weighted:
+        x_ref, w_ref, fsum_ref, cnt_ref = refs
+    else:
+        x_ref, fsum_ref, cnt_ref = refs
+    x = x_ref[...].astype(jnp.float32)  # (block_rows, LANES)
+    w = w_ref[...].astype(jnp.float32) if weighted else None
+    valid = _valid_mask(b, x.shape, n, block_rows)
+    for j in range(npiv):  # static unroll: npiv is a trace-time constant
+        fsums, cnts = _fg_tile(x, valid, y_ref[j], w)
+        for i, v in enumerate(fsums):
+            fsum_ref[0, j, i] = v
+        for i, v in enumerate(cnts):
+            cnt_ref[0, j, i] = v
+
+
+def _fg_kernel_batched(y_ref, *refs, n, block_rows, weighted):
+    """Row-wise body: grid (B, nblocks), one pivot per problem row."""
+    r = pl.program_id(0)  # problem row
+    b = pl.program_id(1)  # block within the row
+    if weighted:
+        x_ref, w_ref, fsum_ref, cnt_ref = refs
+    else:
+        x_ref, fsum_ref, cnt_ref = refs
+    x = x_ref[0].astype(jnp.float32)  # (block_rows, LANES)
+    w = w_ref[0].astype(jnp.float32) if weighted else None
+    valid = _valid_mask(b, x.shape, n, block_rows)
+    fsums, cnts = _fg_tile(x, valid, y_ref[r], w)
+    for i, v in enumerate(fsums):
+        fsum_ref[0, 0, i] = v
+    for i, v in enumerate(cnts):
+        cnt_ref[0, 0, i] = v
+
+
+def _hist_kernel_multi(y_ref, *refs, n, npiv, block_rows, weighted):
+    """One x (or x/w) tile, ALL K brackets: like :func:`_fg_kernel_multi`,
+    the tile is resident once and every live bracket's histogram is
+    computed from it (K static, bracket loop unrolls at trace time)."""
+    b = pl.program_id(0)
+    if weighted:
+        x_ref, w_ref, *out_refs = refs
+    else:
+        x_ref, *out_refs = refs
+    x = x_ref[...].astype(jnp.float32)  # (block_rows, LANES)
+    w = w_ref[...].astype(jnp.float32) if weighted else None
+    valid = _valid_mask(b, x.shape, n, block_rows)
+    for j in range(npiv):  # static unroll
+        outs = _bin_tile(x, valid, y_ref[0, j], y_ref[1, j], w)
+        for ref, v in zip(out_refs, outs):
+            ref[0, j, :] = v
+
+
+def _hist_kernel_batched(y_ref, *refs, n, block_rows, weighted):
+    """Row-wise histogram body: grid (B, nblocks), per-row slot bounds."""
+    r = pl.program_id(0)  # problem row
+    b = pl.program_id(1)  # block within the row
+    if weighted:
+        x_ref, w_ref, *out_refs = refs
+    else:
+        x_ref, *out_refs = refs
+    x = x_ref[0].astype(jnp.float32)  # (block_rows, LANES)
+    w = w_ref[0].astype(jnp.float32) if weighted else None
+    valid = _valid_mask(b, x.shape, n, block_rows)
+    outs = _bin_tile(x, valid, y_ref[0, r], y_ref[1, r], w)
+    for ref, v in zip(out_refs, outs):
+        ref[0, 0, :] = v
+
+
+# ---------------------------------------------------------------------------
+# pallas_call builders (shared pad/spec/tree-reduce plumbing)
+# ---------------------------------------------------------------------------
+
+
+def _fg_call_multi(x, w, y, *, block_rows, interpret):
+    """Shared-x multi-pivot launch; returns per-pivot (K,) partial vectors
+    (the counting leg's four or the weights leg's six)."""
+    weighted = w is not None
+    n = x.size
+    npiv = y.shape[0]
+    x2, nblocks = _pad_to_tiles(x.reshape(-1), block_rows)
+    data = [x2]
+    if weighted:
+        data.append(_pad_to_tiles(w.reshape(-1), block_rows)[0])
+    y = jnp.asarray(y, jnp.float32).reshape(npiv)
+    nf = 4 if weighted else 2
+
+    fsum, cnt = pl.pallas_call(
+        functools.partial(_fg_kernel_multi, n=n, npiv=npiv,
+                          block_rows=block_rows, weighted=weighted),
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)]  # y: tiny, whole-array
+        + [pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))] * len(data),
+        out_specs=[
+            pl.BlockSpec((1, npiv, nf), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, npiv, 2), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, npiv, nf), jnp.float32),
+            jax.ShapeDtypeStruct((nblocks, npiv, 2), jnp.int32),
+        ],
+        interpret=interpret,
+    )(y, *data)
+    s = jnp.sum(fsum, axis=0)
+    c = jnp.sum(cnt, axis=0)
+    return tuple(s[:, i] for i in range(nf)) + (c[:, 0], c[:, 1])
+
+
+def _fg_call_batched(x, w, y, *, block_rows, interpret):
+    """Row-wise launch over (B, n) problems; returns (B,) partial vectors."""
+    weighted = w is not None
+    bsz, n = x.shape
+    x3, nblocks = _pad_to_tiles(x, block_rows)
+    data = [x3]
+    if weighted:
+        data.append(_pad_to_tiles(w, block_rows)[0])
+    y = jnp.asarray(y, jnp.float32).reshape(bsz)
+    nf = 4 if weighted else 2
+
+    fsum, cnt = pl.pallas_call(
+        functools.partial(_fg_kernel_batched, n=n, block_rows=block_rows,
+                          weighted=weighted),
+        grid=(bsz, nblocks),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)]
+        + [pl.BlockSpec((1, block_rows, LANES),
+                        lambda r, b: (r, b, 0))] * len(data),
+        out_specs=[
+            pl.BlockSpec((1, 1, nf), lambda r, b: (r, b, 0)),
+            pl.BlockSpec((1, 1, 2), lambda r, b: (r, b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, nblocks, nf), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, nblocks, 2), jnp.int32),
+        ],
+        interpret=interpret,
+    )(y, *data)
+    s = jnp.sum(fsum, axis=1)
+    c = jnp.sum(cnt, axis=1)
+    return tuple(s[..., i] for i in range(nf)) + (c[..., 0], c[..., 1])
+
+
+def _slot_bounds(edges):
+    """``(..., nbins+1)`` edges -> ``(..., nbins+2)`` (lower, upper) slot
+    bounds.  Pure concatenation — NO fp arithmetic (see the exactness
+    contract below)."""
+    ninf = jnp.full_like(edges[..., :1], -jnp.inf)
+    pinf = jnp.full_like(edges[..., :1], jnp.inf)
+    return (jnp.concatenate([ninf, edges], axis=-1),
+            jnp.concatenate([edges, pinf], axis=-1))
+
+
+def _hist_out(nout, lead, nslots):
+    """Histogram out_shape list: cnt is int32, the mass/sum slots f32."""
+    return [jax.ShapeDtypeStruct(lead + (nslots,),
+                                 jnp.int32 if i == 0 else jnp.float32)
+            for i in range(nout)]
+
+
+def _hist_call_multi(x, w, edges, *, block_rows, interpret):
+    """Shared-x multi-bracket histogram launch; per-bracket slot vectors."""
+    weighted = w is not None
+    n = x.size
+    npiv, nbins = edges.shape[0], edges.shape[-1] - 1
+    x2, nblocks = _pad_to_tiles(x.reshape(-1), block_rows)
+    data = [x2]
+    if weighted:
+        data.append(_pad_to_tiles(w.reshape(-1), block_rows)[0])
+    lower, upper = _slot_bounds(jnp.asarray(edges, jnp.float32))
+    y = jnp.stack([lower, upper])  # (2, K, nbins + 2)
+    nout = 3 if weighted else 2
+
+    outs = pl.pallas_call(
+        functools.partial(_hist_kernel_multi, n=n, npiv=npiv,
+                          block_rows=block_rows, weighted=weighted),
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)]  # slot bounds: tiny
+        + [pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))] * len(data),
+        out_specs=[pl.BlockSpec((1, npiv, nbins + 2),
+                                lambda i: (i, 0, 0))] * nout,
+        out_shape=_hist_out(nout, (nblocks, npiv), nbins + 2),
+        interpret=interpret,
+    )(y, *data)
+    return tuple(jnp.sum(o, axis=0) for o in outs)
+
+
+def _hist_call_batched(x, w, edges, *, block_rows, interpret):
+    """Row-wise histogram launch: per-row slot vectors ``(B, nbins + 2)``."""
+    weighted = w is not None
+    bsz, n = x.shape
+    nbins = edges.shape[-1] - 1
+    x3, nblocks = _pad_to_tiles(x, block_rows)
+    data = [x3]
+    if weighted:
+        data.append(_pad_to_tiles(w, block_rows)[0])
+    lower, upper = _slot_bounds(
+        jnp.asarray(edges, jnp.float32).reshape(bsz, nbins + 1))
+    y = jnp.stack([lower, upper])  # (2, B, nbins + 2)
+    nout = 3 if weighted else 2
+
+    outs = pl.pallas_call(
+        functools.partial(_hist_kernel_batched, n=n, block_rows=block_rows,
+                          weighted=weighted),
+        grid=(bsz, nblocks),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)]
+        + [pl.BlockSpec((1, block_rows, LANES),
+                        lambda r, b: (r, b, 0))] * len(data),
+        out_specs=[pl.BlockSpec((1, 1, nbins + 2),
+                                lambda r, b: (r, b, 0))] * nout,
+        out_shape=_hist_out(nout, (bsz, nblocks), nbins + 2),
+        interpret=interpret,
+    )(y, *data)
+    return tuple(jnp.sum(o, axis=1) for o in outs)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points (stable names; thin views of the builders above)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def cp_partials(
     x: jax.Array,
     y: jax.Array,
@@ -98,74 +375,15 @@ def cp_partials(
     block_rows: int = DEF_BLOCK_ROWS,
     interpret: bool = False,
 ):
-    """Per-pivot fused partials of the selection objective.
+    """Per-pivot fused partials of the selection objective (K=1 view of the
+    multi-pivot kernel).
 
     Returns ``(sum_pos, sum_neg, n_lt, n_le)`` scalars, bit-identical in
     count terms to the pure-jnp oracle ``kernels.ref.cp_partials_ref``.
     """
-    n = x.size
-    x2, nblocks = _pad_to_tiles(x.reshape(-1), block_rows)
-    y = jnp.asarray(y, jnp.float32).reshape(1)
-
-    fsum, cnt = pl.pallas_call(
-        functools.partial(_partials_kernel, n=n, block_rows=block_rows),
-        grid=(nblocks,),
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),  # y: tiny, whole-array
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, 2), lambda i: (i, 0)),
-            pl.BlockSpec((1, 2), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((nblocks, 2), jnp.float32),
-            jax.ShapeDtypeStruct((nblocks, 2), jnp.int32),
-        ],
-        interpret=interpret,
-    )(y, x2)
-    sums = jnp.sum(fsum, axis=0)
-    cnts = jnp.sum(cnt, axis=0)
-    return sums[0], sums[1], cnts[0], cnts[1]
-
-
-def _batched_kernel(y_ref, x_ref, fsum_ref, cnt_ref, *, n, block_rows):
-    r = pl.program_id(0)  # problem row
-    b = pl.program_id(1)  # block within the row
-    y = y_ref[r]
-    x = x_ref[0].astype(jnp.float32)  # (block_rows, LANES)
-    valid = _valid_mask(b, x.shape, n, block_rows)
-
-    d = x - y
-    zero = jnp.zeros_like(x)
-    fsum_ref[0, 0, 0] = jnp.sum(jnp.where(valid & (d > 0), d, zero))
-    fsum_ref[0, 0, 1] = jnp.sum(jnp.where(valid & (d < 0), -d, zero))
-    cnt_ref[0, 0, 0] = jnp.sum(jnp.where(valid & (d < 0), 1, 0).astype(jnp.int32))
-    cnt_ref[0, 0, 1] = jnp.sum(jnp.where(valid & (d <= 0), 1, 0).astype(jnp.int32))
-
-
-def _multi_kernel(y_ref, x_ref, fsum_ref, cnt_ref, *, n, npiv, block_rows):
-    """One x tile, ALL K pivots: the tile is read HBM -> VMEM once and the
-    K per-pivot partial quadruples are computed from registers/VMEM — K× less
-    HBM traffic than K independent passes (the win behind shared-x batched
-    selection: a quantile set costs one sweep per iteration, not K).
-
-    K is static (the pivot vector's shape), so the pivot loop is unrolled at
-    trace time; all stores use static indices.
-    """
-    b = pl.program_id(0)
-    x = x_ref[...].astype(jnp.float32)  # (block_rows, LANES)
-    valid = _valid_mask(b, x.shape, n, block_rows)
-
-    zero = jnp.zeros_like(x)
-    for j in range(npiv):  # static unroll: npiv is a trace-time constant
-        d = x - y_ref[j]
-        fsum_ref[0, j, 0] = jnp.sum(jnp.where(valid & (d > 0), d, zero))
-        fsum_ref[0, j, 1] = jnp.sum(jnp.where(valid & (d < 0), -d, zero))
-        cnt_ref[0, j, 0] = jnp.sum(
-            jnp.where(valid & (d < 0), 1, 0).astype(jnp.int32))
-        cnt_ref[0, j, 1] = jnp.sum(
-            jnp.where(valid & (d <= 0), 1, 0).astype(jnp.int32))
+    parts = _fg_call_multi(x, None, jnp.asarray(y, jnp.float32).reshape(1),
+                           block_rows=block_rows, interpret=interpret)
+    return tuple(p[0] for p in parts)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -183,32 +401,8 @@ def cp_partials_multi(
     the data pass of shared-x batched selection (``multi_order_statistic`` /
     ``quantiles``): all K brackets iterate against one sweep of ``x``.
     """
-    n = x.size
-    npiv = y.shape[0]
-    x2, nblocks = _pad_to_tiles(x.reshape(-1), block_rows)
-    y = jnp.asarray(y, jnp.float32).reshape(npiv)
-
-    fsum, cnt = pl.pallas_call(
-        functools.partial(_multi_kernel, n=n, npiv=npiv,
-                          block_rows=block_rows),
-        grid=(nblocks,),
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),  # y: tiny, whole-array
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, npiv, 2), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, npiv, 2), lambda i: (i, 0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((nblocks, npiv, 2), jnp.float32),
-            jax.ShapeDtypeStruct((nblocks, npiv, 2), jnp.int32),
-        ],
-        interpret=interpret,
-    )(y, x2)
-    sums = jnp.sum(fsum, axis=0)
-    cnts = jnp.sum(cnt, axis=0)
-    return sums[:, 0], sums[:, 1], cnts[:, 0], cnts[:, 1]
+    return _fg_call_multi(x, None, y, block_rows=block_rows,
+                          interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -225,79 +419,8 @@ def cp_partials_batched(
     robust gradient aggregation solve millions of small problems at once).
     Returns four (B,) vectors.
     """
-    bsz, n = x.shape
-    x3, nblocks = _pad_to_tiles(x, block_rows)
-    y = jnp.asarray(y, jnp.float32).reshape(bsz)
-
-    fsum, cnt = pl.pallas_call(
-        functools.partial(_batched_kernel, n=n, block_rows=block_rows),
-        grid=(bsz, nblocks),
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),
-            pl.BlockSpec((1, block_rows, LANES), lambda r, b: (r, b, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, 1, 2), lambda r, b: (r, b, 0)),
-            pl.BlockSpec((1, 1, 2), lambda r, b: (r, b, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((bsz, nblocks, 2), jnp.float32),
-            jax.ShapeDtypeStruct((bsz, nblocks, 2), jnp.int32),
-        ],
-        interpret=interpret,
-    )(y, x3)
-    sums = jnp.sum(fsum, axis=1)
-    cnts = jnp.sum(cnt, axis=1)
-    return sums[..., 0], sums[..., 1], cnts[..., 0], cnts[..., 1]
-
-
-# ---------------------------------------------------------------------------
-# Weighted selection objective: fused weighted partials
-# ---------------------------------------------------------------------------
-#
-# The weighted generalization F_w(y) = sum_i w_i * rho(x_i - y) (whose
-# minimizer is the weighted order statistic — the primitive behind weighted
-# medians in Theil-Sen and IRLS reweighting) needs SIX additive partials per
-# pivot instead of four:
-#
-#     (wsum_pos, wsum_neg)   f32   sum of w*(x-y)+ / w*(y-x)+
-#     (w_lt, w_le)           f32   weight MASS below / at-or-below the pivot
-#     (n_lt, n_le)           i32   element COUNTS (drive the cap-based
-#                                  stopping rule — buffer capacity is a
-#                                  count, not a mass)
-#
-# All six are additive over blocks/shards, so the multi-device combine stays
-# a psum, exactly like the unweighted quadruple.  Weights ride the same tile
-# layout as x (padded tail masked by the global element index; padded weight
-# lanes contribute nothing because the mask gates every accumulation).
-
-
-def _wpartials_tile(x, w, valid, y):
-    """Per-tile weighted partials for one pivot: six accumulators."""
-    d = x - y
-    zero = jnp.zeros_like(x)
-    wsp = jnp.sum(jnp.where(valid & (d > 0), w * d, zero))
-    wsn = jnp.sum(jnp.where(valid & (d < 0), -w * d, zero))
-    wlt = jnp.sum(jnp.where(valid & (d < 0), w, zero))
-    wle = jnp.sum(jnp.where(valid & (d <= 0), w, zero))
-    nlt = jnp.sum(jnp.where(valid & (d < 0), 1, 0).astype(jnp.int32))
-    nle = jnp.sum(jnp.where(valid & (d <= 0), 1, 0).astype(jnp.int32))
-    return wsp, wsn, wlt, wle, nlt, nle
-
-
-def _wpartials_kernel(y_ref, x_ref, w_ref, fsum_ref, cnt_ref, *, n,
-                      block_rows):
-    b = pl.program_id(0)
-    x = x_ref[...].astype(jnp.float32)  # (block_rows, LANES)
-    w = w_ref[...].astype(jnp.float32)
-    valid = _valid_mask(b, x.shape, n, block_rows)
-    wsp, wsn, wlt, wle, nlt, nle = _wpartials_tile(x, w, valid, y_ref[0])
-    fsum_ref[0, 0] = wsp
-    fsum_ref[0, 1] = wsn
-    fsum_ref[0, 2] = wlt
-    fsum_ref[0, 3] = wle
-    cnt_ref[0, 0] = nlt
-    cnt_ref[0, 1] = nle
+    return _fg_call_batched(x, None, y, block_rows=block_rows,
+                            interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -309,53 +432,32 @@ def wcp_partials(
     block_rows: int = DEF_BLOCK_ROWS,
     interpret: bool = False,
 ):
-    """Weighted fused partials: ``x``/``w`` (n,), scalar pivot ``y``.
+    """Weighted fused partials: ``x``/``w`` (n,), scalar pivot ``y`` (K=1
+    view of the weighted multi-pivot kernel).
 
     Returns ``(wsum_pos, wsum_neg, w_lt, w_le, n_lt, n_le)`` scalars; count
     terms bit-identical to ``kernels.ref.wcp_partials_ref``.
     """
-    n = x.size
-    x2, nblocks = _pad_to_tiles(x.reshape(-1), block_rows)
-    w2, _ = _pad_to_tiles(w.reshape(-1), block_rows)
-    y = jnp.asarray(y, jnp.float32).reshape(1)
-
-    fsum, cnt = pl.pallas_call(
-        functools.partial(_wpartials_kernel, n=n, block_rows=block_rows),
-        grid=(nblocks,),
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),  # y: tiny, whole-array
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, 4), lambda i: (i, 0)),
-            pl.BlockSpec((1, 2), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((nblocks, 4), jnp.float32),
-            jax.ShapeDtypeStruct((nblocks, 2), jnp.int32),
-        ],
-        interpret=interpret,
-    )(y, x2, w2)
-    s = jnp.sum(fsum, axis=0)
-    c = jnp.sum(cnt, axis=0)
-    return s[0], s[1], s[2], s[3], c[0], c[1]
+    parts = _fg_call_multi(x, w, jnp.asarray(y, jnp.float32).reshape(1),
+                           block_rows=block_rows, interpret=interpret)
+    return tuple(p[0] for p in parts)
 
 
-def _wbatched_kernel(y_ref, x_ref, w_ref, fsum_ref, cnt_ref, *, n,
-                     block_rows):
-    r = pl.program_id(0)  # problem row
-    b = pl.program_id(1)  # block within the row
-    x = x_ref[0].astype(jnp.float32)  # (block_rows, LANES)
-    w = w_ref[0].astype(jnp.float32)
-    valid = _valid_mask(b, x.shape, n, block_rows)
-    wsp, wsn, wlt, wle, nlt, nle = _wpartials_tile(x, w, valid, y_ref[r])
-    fsum_ref[0, 0, 0] = wsp
-    fsum_ref[0, 0, 1] = wsn
-    fsum_ref[0, 0, 2] = wlt
-    fsum_ref[0, 0, 3] = wle
-    cnt_ref[0, 0, 0] = nlt
-    cnt_ref[0, 0, 1] = nle
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def wcp_partials_multi(
+    x: jax.Array,
+    w: jax.Array,
+    y: jax.Array,
+    *,
+    block_rows: int = DEF_BLOCK_ROWS,
+    interpret: bool = False,
+):
+    """Shared-x weighted multi-pivot partials: ``x``/``w`` (n,), ``y`` (K,).
+
+    Returns six (K,) vectors.
+    """
+    return _fg_call_multi(x, w, y, block_rows=block_rows,
+                          interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -372,94 +474,8 @@ def wcp_partials_batched(
     Returns six (B,) vectors ``(wsum_pos, wsum_neg, w_lt, w_le, n_lt,
     n_le)``.
     """
-    bsz, n = x.shape
-    x3, nblocks = _pad_to_tiles(x, block_rows)
-    w3, _ = _pad_to_tiles(w, block_rows)
-    y = jnp.asarray(y, jnp.float32).reshape(bsz)
-
-    fsum, cnt = pl.pallas_call(
-        functools.partial(_wbatched_kernel, n=n, block_rows=block_rows),
-        grid=(bsz, nblocks),
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),
-            pl.BlockSpec((1, block_rows, LANES), lambda r, b: (r, b, 0)),
-            pl.BlockSpec((1, block_rows, LANES), lambda r, b: (r, b, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, 1, 4), lambda r, b: (r, b, 0)),
-            pl.BlockSpec((1, 1, 2), lambda r, b: (r, b, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((bsz, nblocks, 4), jnp.float32),
-            jax.ShapeDtypeStruct((bsz, nblocks, 2), jnp.int32),
-        ],
-        interpret=interpret,
-    )(y, x3, w3)
-    s = jnp.sum(fsum, axis=1)
-    c = jnp.sum(cnt, axis=1)
-    return (s[..., 0], s[..., 1], s[..., 2], s[..., 3],
-            c[..., 0], c[..., 1])
-
-
-def _wmulti_kernel(y_ref, x_ref, w_ref, fsum_ref, cnt_ref, *, n, npiv,
-                   block_rows):
-    """One x/w tile pair, ALL K pivots — same VMEM-residency win as the
-    unweighted multi kernel (K is static, the pivot loop unrolls)."""
-    b = pl.program_id(0)
-    x = x_ref[...].astype(jnp.float32)  # (block_rows, LANES)
-    w = w_ref[...].astype(jnp.float32)
-    valid = _valid_mask(b, x.shape, n, block_rows)
-    for j in range(npiv):  # static unroll
-        wsp, wsn, wlt, wle, nlt, nle = _wpartials_tile(x, w, valid, y_ref[j])
-        fsum_ref[0, j, 0] = wsp
-        fsum_ref[0, j, 1] = wsn
-        fsum_ref[0, j, 2] = wlt
-        fsum_ref[0, j, 3] = wle
-        cnt_ref[0, j, 0] = nlt
-        cnt_ref[0, j, 1] = nle
-
-
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def wcp_partials_multi(
-    x: jax.Array,
-    w: jax.Array,
-    y: jax.Array,
-    *,
-    block_rows: int = DEF_BLOCK_ROWS,
-    interpret: bool = False,
-):
-    """Shared-x weighted multi-pivot partials: ``x``/``w`` (n,), ``y`` (K,).
-
-    Returns six (K,) vectors.
-    """
-    n = x.size
-    npiv = y.shape[0]
-    x2, nblocks = _pad_to_tiles(x.reshape(-1), block_rows)
-    w2, _ = _pad_to_tiles(w.reshape(-1), block_rows)
-    y = jnp.asarray(y, jnp.float32).reshape(npiv)
-
-    fsum, cnt = pl.pallas_call(
-        functools.partial(_wmulti_kernel, n=n, npiv=npiv,
-                          block_rows=block_rows),
-        grid=(nblocks,),
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, npiv, 4), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, npiv, 2), lambda i: (i, 0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((nblocks, npiv, 4), jnp.float32),
-            jax.ShapeDtypeStruct((nblocks, npiv, 2), jnp.int32),
-        ],
-        interpret=interpret,
-    )(y, x2, w2)
-    s = jnp.sum(fsum, axis=0)
-    c = jnp.sum(cnt, axis=0)
-    return s[:, 0], s[:, 1], s[:, 2], s[:, 3], c[:, 0], c[:, 1]
+    return _fg_call_batched(x, w, y, block_rows=block_rows,
+                            interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -467,12 +483,12 @@ def wcp_partials_multi(
 # ---------------------------------------------------------------------------
 #
 # One sweep bins x against the current bracket's NBINS sub-intervals and
-# emits additive (count, sum) partials per slot — the count vector
-# localizes x_(k) to ONE bin (log2(NBINS) bisection steps of information
-# per data pass) and the per-bin sums are the CP support-line ingredients
-# (sum_pos/sum_neg at every edge by prefix sums), all for the HBM cost of a
-# single fused pass.  Both outputs are additive over blocks/shards, so they
-# psum across a mesh exactly like the FG quadruple.
+# emits additive per-slot partials — the measure vector localizes x_(k) to
+# ONE bin (log2(NBINS) bisection steps of information per data pass) and
+# the per-bin sums are the CP support-line ingredients (the in-bin polish:
+# the support lines at every edge come free from prefix sums), all for the
+# HBM cost of a single fused pass.  All outputs are additive over
+# blocks/shards, so they psum across a mesh exactly like the FG partials.
 #
 # Slot layout (nbins + 2 slots for edges e_0 <= ... <= e_nbins):
 #   slot 0          x <= e_0
@@ -482,55 +498,14 @@ def wcp_partials_multi(
 # at every edge, and sum(cnt) == n is the per-row count invariant.
 #
 # EXACTNESS CONTRACT: the kernels take the REALIZED edge values — computed
-# ONCE by the engine via ``kernels.ref.bin_edges`` — and only COMPARE
-# against them.  Recomputing edges here from (lo, hi) would be unsound:
-# XLA may contract ``lo + w*j`` into an FMA in one fusion context and not
-# another, yielding different fp edges (observed at full-f32-range
-# brackets); comparisons against one shared array cannot diverge, so the
-# histogram counts are exactly consistent with the engine's later
-# ``x <= e_j`` narrowing and finalize comparisons.
-
-
-def _slot_bounds(edges):
-    """``(..., nbins+1)`` edges -> ``(..., nbins+2)`` (lower, upper) slot
-    bounds.  Pure concatenation — NO fp arithmetic (see the exactness
-    contract above)."""
-    ninf = jnp.full_like(edges[..., :1], -jnp.inf)
-    pinf = jnp.full_like(edges[..., :1], jnp.inf)
-    return (jnp.concatenate([ninf, edges], axis=-1),
-            jnp.concatenate([edges, pinf], axis=-1))
-
-
-def _bin_tile(x, valid, lower, upper):
-    """Per-tile slot (count, sum) partials for one bracket.
-
-    ``x``/``valid`` are ``(block_rows, LANES)``; ``lower``/``upper`` the
-    ``(nbins + 2,)`` slot bounds.  Returns ``(cnt, bsum)`` of shape
-    ``(nbins + 2,)``.  The one-hot intermediate is
-    ``(block_rows, LANES, nbins + 2)`` — callers bound ``block_rows``
-    accordingly (DEF_HIST_BLOCK_ROWS).
-    """
-    nslots = lower.shape[-1]
-    j = jax.lax.broadcasted_iota(jnp.int32, (1, 1, nslots), 2)
-    lo3 = lower.reshape(1, 1, nslots)
-    up3 = upper.reshape(1, 1, nslots)
-    x3 = x[:, :, None]
-    # slot 0 has no lower bound — `x > -inf` would drop x == -inf, so the
-    # first slot escapes the strict lower test (keeps sum(cnt) == n and
-    # parity with the searchsorted oracle)
-    m = valid[:, :, None] & ((x3 > lo3) | (j == 0)) & (x3 <= up3)
-    cnt = jnp.sum(m.astype(jnp.int32), axis=(0, 1))
-    bsum = jnp.sum(jnp.where(m, x3, jnp.float32(0.0)), axis=(0, 1))
-    return cnt, bsum
-
-
-def _histogram_kernel(y_ref, x_ref, cnt_ref, sum_ref, *, n, block_rows):
-    b = pl.program_id(0)
-    x = x_ref[...].astype(jnp.float32)  # (block_rows, LANES)
-    valid = _valid_mask(b, x.shape, n, block_rows)
-    cnt, bsum = _bin_tile(x, valid, y_ref[0], y_ref[1])
-    cnt_ref[0, :] = cnt
-    sum_ref[0, :] = bsum
+# ONCE by the engine via ``kernels.ref.bin_edges`` (or
+# ``core.selection.polish_edges``) — and only COMPARE against them.
+# Recomputing edges here from (lo, hi) would be unsound: XLA may contract
+# ``lo + w*j`` into an FMA in one fusion context and not another, yielding
+# different fp edges (observed at full-f32-range brackets); comparisons
+# against one shared array cannot diverge, so the histogram counts are
+# exactly consistent with the engine's later ``x <= e_j`` narrowing and
+# finalize comparisons.
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -543,46 +518,16 @@ def cp_histogram(
 ):
     """Binned data pass: ``x`` (n,), realized bracket edges (nbins+1,)
     (monotone non-decreasing; build them with ``kernels.ref.bin_edges``).
+    The K=1 view of :func:`cp_histogram_multi`.
 
     Returns ``(cnt, bsum)`` of shape ``(nbins + 2,)`` — counts int32
     (bit-identical to ``kernels.ref.cp_histogram_ref``), sums f32.
     """
-    n = x.size
     nbins = edges.shape[-1] - 1
-    x2, nblocks = _pad_to_tiles(x.reshape(-1), block_rows)
-    lower, upper = _slot_bounds(
-        jnp.asarray(edges, jnp.float32).reshape(nbins + 1))
-    y = jnp.stack([lower, upper])  # (2, nbins + 2)
-
-    cnt, bsum = pl.pallas_call(
-        functools.partial(_histogram_kernel, n=n, block_rows=block_rows),
-        grid=(nblocks,),
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),  # slot bounds: tiny
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, nbins + 2), lambda i: (i, 0)),
-            pl.BlockSpec((1, nbins + 2), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((nblocks, nbins + 2), jnp.int32),
-            jax.ShapeDtypeStruct((nblocks, nbins + 2), jnp.float32),
-        ],
-        interpret=interpret,
-    )(y, x2)
-    return jnp.sum(cnt, axis=0), jnp.sum(bsum, axis=0)
-
-
-def _histogram_batched_kernel(y_ref, x_ref, cnt_ref, sum_ref, *, n,
-                              block_rows):
-    r = pl.program_id(0)  # problem row
-    b = pl.program_id(1)  # block within the row
-    x = x_ref[0].astype(jnp.float32)  # (block_rows, LANES)
-    valid = _valid_mask(b, x.shape, n, block_rows)
-    cnt, bsum = _bin_tile(x, valid, y_ref[0, r], y_ref[1, r])
-    cnt_ref[0, 0, :] = cnt
-    sum_ref[0, 0, :] = bsum
+    outs = _hist_call_multi(
+        x, None, jnp.asarray(edges, jnp.float32).reshape(1, nbins + 1),
+        block_rows=block_rows, interpret=interpret)
+    return tuple(o[0] for o in outs)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -595,46 +540,8 @@ def cp_histogram_batched(
 ):
     """Row-wise binned pass: ``x`` (B, n), per-row realized edges
     ``(B, nbins+1)``.  Returns ``(cnt, bsum)`` of shape ``(B, nbins + 2)``."""
-    bsz, n = x.shape
-    nbins = edges.shape[-1] - 1
-    x3, nblocks = _pad_to_tiles(x, block_rows)
-    lower, upper = _slot_bounds(
-        jnp.asarray(edges, jnp.float32).reshape(bsz, nbins + 1))
-    y = jnp.stack([lower, upper])  # (2, B, nbins + 2)
-
-    cnt, bsum = pl.pallas_call(
-        functools.partial(_histogram_batched_kernel, n=n,
-                          block_rows=block_rows),
-        grid=(bsz, nblocks),
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),
-            pl.BlockSpec((1, block_rows, LANES), lambda r, b: (r, b, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, 1, nbins + 2), lambda r, b: (r, b, 0)),
-            pl.BlockSpec((1, 1, nbins + 2), lambda r, b: (r, b, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((bsz, nblocks, nbins + 2), jnp.int32),
-            jax.ShapeDtypeStruct((bsz, nblocks, nbins + 2), jnp.float32),
-        ],
-        interpret=interpret,
-    )(y, x3)
-    return jnp.sum(cnt, axis=1), jnp.sum(bsum, axis=1)
-
-
-def _histogram_multi_kernel(y_ref, x_ref, cnt_ref, sum_ref, *, n, npiv,
-                            block_rows):
-    """One x tile, ALL K brackets: like ``_multi_kernel``, the tile is read
-    HBM -> VMEM once and every live bracket's histogram is computed from the
-    resident tile (K is static, the bracket loop unrolls at trace time)."""
-    b = pl.program_id(0)
-    x = x_ref[...].astype(jnp.float32)  # (block_rows, LANES)
-    valid = _valid_mask(b, x.shape, n, block_rows)
-    for j in range(npiv):  # static unroll
-        cnt, bsum = _bin_tile(x, valid, y_ref[0, j], y_ref[1, j])
-        cnt_ref[0, j, :] = cnt
-        sum_ref[0, j, :] = bsum
+    return _hist_call_batched(x, None, edges, block_rows=block_rows,
+                              interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -648,82 +555,8 @@ def cp_histogram_multi(
     """Shared-x multi-bracket binned pass: ``x`` (n,), per-pivot realized
     edges ``(K, nbins+1)``.  Returns ``(cnt, bsum)`` of shape
     ``(K, nbins + 2)``."""
-    n = x.size
-    npiv, nbins = edges.shape[0], edges.shape[-1] - 1
-    x2, nblocks = _pad_to_tiles(x.reshape(-1), block_rows)
-    lower, upper = _slot_bounds(jnp.asarray(edges, jnp.float32))
-    y = jnp.stack([lower, upper])  # (2, K, nbins + 2)
-
-    cnt, bsum = pl.pallas_call(
-        functools.partial(_histogram_multi_kernel, n=n, npiv=npiv,
-                          block_rows=block_rows),
-        grid=(nblocks,),
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, npiv, nbins + 2), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, npiv, nbins + 2), lambda i: (i, 0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((nblocks, npiv, nbins + 2), jnp.int32),
-            jax.ShapeDtypeStruct((nblocks, npiv, nbins + 2), jnp.float32),
-        ],
-        interpret=interpret,
-    )(y, x2)
-    return jnp.sum(cnt, axis=0), jnp.sum(bsum, axis=0)
-
-
-# ---------------------------------------------------------------------------
-# Weighted histogram kernels: per-slot weight MASS next to the counts
-# ---------------------------------------------------------------------------
-#
-# The weighted binned descent narrows against a target cumulative weight W_k,
-# so each sweep needs the per-slot weight mass sum(w_i : x_i in slot) next to
-# the integer count (the count still drives the cap-based stopping rule and
-# certifies sum(cnt) == n).  Per slot the kernels emit
-#
-#     cnt    i32   element count          (exactness bookkeeping, cap rule)
-#     wcnt   f32   sum of w_i             (the narrowing signal)
-#     wsum   f32   sum of w_i * x_i       (CP-polish ingredient, additive)
-#
-# all additive across blocks/shards — the distributed combine psums the
-# (nbins + 2,) mass vector exactly like the unweighted count vector.  The
-# EXACTNESS CONTRACT is unchanged: realized edges come from the engine via
-# ``kernels.ref.bin_edges`` and are only COMPARED against.
-
-
-def _wbin_tile(x, w, valid, lower, upper):
-    """Per-tile weighted slot partials for one bracket.
-
-    Returns ``(cnt, wcnt, wsum)`` of shape ``(nbins + 2,)``; same one-hot
-    membership (and VMEM sizing) as :func:`_bin_tile`.
-    """
-    nslots = lower.shape[-1]
-    j = jax.lax.broadcasted_iota(jnp.int32, (1, 1, nslots), 2)
-    lo3 = lower.reshape(1, 1, nslots)
-    up3 = upper.reshape(1, 1, nslots)
-    x3 = x[:, :, None]
-    w3 = w[:, :, None]
-    # slot 0 escapes the strict lower test (x == -inf), as in _bin_tile
-    m = valid[:, :, None] & ((x3 > lo3) | (j == 0)) & (x3 <= up3)
-    cnt = jnp.sum(m.astype(jnp.int32), axis=(0, 1))
-    wcnt = jnp.sum(jnp.where(m, w3, jnp.float32(0.0)), axis=(0, 1))
-    wsum = jnp.sum(jnp.where(m, w3 * x3, jnp.float32(0.0)), axis=(0, 1))
-    return cnt, wcnt, wsum
-
-
-def _whistogram_kernel(y_ref, x_ref, w_ref, cnt_ref, wcnt_ref, sum_ref, *,
-                       n, block_rows):
-    b = pl.program_id(0)
-    x = x_ref[...].astype(jnp.float32)  # (block_rows, LANES)
-    w = w_ref[...].astype(jnp.float32)
-    valid = _valid_mask(b, x.shape, n, block_rows)
-    cnt, wcnt, wsum = _wbin_tile(x, w, valid, y_ref[0], y_ref[1])
-    cnt_ref[0, :] = cnt
-    wcnt_ref[0, :] = wcnt
-    sum_ref[0, :] = wsum
+    return _hist_call_multi(x, None, edges, block_rows=block_rows,
+                            interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -736,53 +569,16 @@ def wcp_histogram(
     interpret: bool = False,
 ):
     """Weighted binned pass: ``x``/``w`` (n,), realized edges (nbins+1,).
+    The K=1 view of :func:`wcp_histogram_multi`.
 
     Returns ``(cnt, wcnt, wsum)`` of shape ``(nbins + 2,)`` — counts int32
     (bit-identical to ``kernels.ref.wcp_histogram_ref``), masses/sums f32.
     """
-    n = x.size
     nbins = edges.shape[-1] - 1
-    x2, nblocks = _pad_to_tiles(x.reshape(-1), block_rows)
-    w2, _ = _pad_to_tiles(w.reshape(-1), block_rows)
-    lower, upper = _slot_bounds(
-        jnp.asarray(edges, jnp.float32).reshape(nbins + 1))
-    y = jnp.stack([lower, upper])  # (2, nbins + 2)
-
-    cnt, wcnt, wsum = pl.pallas_call(
-        functools.partial(_whistogram_kernel, n=n, block_rows=block_rows),
-        grid=(nblocks,),
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),  # slot bounds: tiny
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, nbins + 2), lambda i: (i, 0)),
-            pl.BlockSpec((1, nbins + 2), lambda i: (i, 0)),
-            pl.BlockSpec((1, nbins + 2), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((nblocks, nbins + 2), jnp.int32),
-            jax.ShapeDtypeStruct((nblocks, nbins + 2), jnp.float32),
-            jax.ShapeDtypeStruct((nblocks, nbins + 2), jnp.float32),
-        ],
-        interpret=interpret,
-    )(y, x2, w2)
-    return (jnp.sum(cnt, axis=0), jnp.sum(wcnt, axis=0),
-            jnp.sum(wsum, axis=0))
-
-
-def _whistogram_batched_kernel(y_ref, x_ref, w_ref, cnt_ref, wcnt_ref,
-                               sum_ref, *, n, block_rows):
-    r = pl.program_id(0)  # problem row
-    b = pl.program_id(1)  # block within the row
-    x = x_ref[0].astype(jnp.float32)  # (block_rows, LANES)
-    w = w_ref[0].astype(jnp.float32)
-    valid = _valid_mask(b, x.shape, n, block_rows)
-    cnt, wcnt, wsum = _wbin_tile(x, w, valid, y_ref[0, r], y_ref[1, r])
-    cnt_ref[0, 0, :] = cnt
-    wcnt_ref[0, 0, :] = wcnt
-    sum_ref[0, 0, :] = wsum
+    outs = _hist_call_multi(
+        x, w, jnp.asarray(edges, jnp.float32).reshape(1, nbins + 1),
+        block_rows=block_rows, interpret=interpret)
+    return tuple(o[0] for o in outs)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -797,50 +593,8 @@ def wcp_histogram_batched(
     """Row-wise weighted binned pass: ``x``/``w`` (B, n), per-row edges
     ``(B, nbins+1)``.  Returns ``(cnt, wcnt, wsum)``, each
     ``(B, nbins + 2)``."""
-    bsz, n = x.shape
-    nbins = edges.shape[-1] - 1
-    x3, nblocks = _pad_to_tiles(x, block_rows)
-    w3, _ = _pad_to_tiles(w, block_rows)
-    lower, upper = _slot_bounds(
-        jnp.asarray(edges, jnp.float32).reshape(bsz, nbins + 1))
-    y = jnp.stack([lower, upper])  # (2, B, nbins + 2)
-
-    cnt, wcnt, wsum = pl.pallas_call(
-        functools.partial(_whistogram_batched_kernel, n=n,
-                          block_rows=block_rows),
-        grid=(bsz, nblocks),
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),
-            pl.BlockSpec((1, block_rows, LANES), lambda r, b: (r, b, 0)),
-            pl.BlockSpec((1, block_rows, LANES), lambda r, b: (r, b, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, 1, nbins + 2), lambda r, b: (r, b, 0)),
-            pl.BlockSpec((1, 1, nbins + 2), lambda r, b: (r, b, 0)),
-            pl.BlockSpec((1, 1, nbins + 2), lambda r, b: (r, b, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((bsz, nblocks, nbins + 2), jnp.int32),
-            jax.ShapeDtypeStruct((bsz, nblocks, nbins + 2), jnp.float32),
-            jax.ShapeDtypeStruct((bsz, nblocks, nbins + 2), jnp.float32),
-        ],
-        interpret=interpret,
-    )(y, x3, w3)
-    return (jnp.sum(cnt, axis=1), jnp.sum(wcnt, axis=1),
-            jnp.sum(wsum, axis=1))
-
-
-def _whistogram_multi_kernel(y_ref, x_ref, w_ref, cnt_ref, wcnt_ref, sum_ref,
-                             *, n, npiv, block_rows):
-    b = pl.program_id(0)
-    x = x_ref[...].astype(jnp.float32)  # (block_rows, LANES)
-    w = w_ref[...].astype(jnp.float32)
-    valid = _valid_mask(b, x.shape, n, block_rows)
-    for j in range(npiv):  # static unroll
-        cnt, wcnt, wsum = _wbin_tile(x, w, valid, y_ref[0, j], y_ref[1, j])
-        cnt_ref[0, j, :] = cnt
-        wcnt_ref[0, j, :] = wcnt
-        sum_ref[0, j, :] = wsum
+    return _hist_call_batched(x, w, edges, block_rows=block_rows,
+                              interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -855,33 +609,5 @@ def wcp_histogram_multi(
     """Shared-x weighted multi-bracket binned pass: ``x``/``w`` (n,),
     per-pivot realized edges ``(K, nbins+1)``.  Returns ``(cnt, wcnt,
     wsum)``, each ``(K, nbins + 2)``."""
-    n = x.size
-    npiv, nbins = edges.shape[0], edges.shape[-1] - 1
-    x2, nblocks = _pad_to_tiles(x.reshape(-1), block_rows)
-    w2, _ = _pad_to_tiles(w.reshape(-1), block_rows)
-    lower, upper = _slot_bounds(jnp.asarray(edges, jnp.float32))
-    y = jnp.stack([lower, upper])  # (2, K, nbins + 2)
-
-    cnt, wcnt, wsum = pl.pallas_call(
-        functools.partial(_whistogram_multi_kernel, n=n, npiv=npiv,
-                          block_rows=block_rows),
-        grid=(nblocks,),
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, npiv, nbins + 2), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, npiv, nbins + 2), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, npiv, nbins + 2), lambda i: (i, 0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((nblocks, npiv, nbins + 2), jnp.int32),
-            jax.ShapeDtypeStruct((nblocks, npiv, nbins + 2), jnp.float32),
-            jax.ShapeDtypeStruct((nblocks, npiv, nbins + 2), jnp.float32),
-        ],
-        interpret=interpret,
-    )(y, x2, w2)
-    return (jnp.sum(cnt, axis=0), jnp.sum(wcnt, axis=0),
-            jnp.sum(wsum, axis=0))
+    return _hist_call_multi(x, w, edges, block_rows=block_rows,
+                            interpret=interpret)

@@ -21,13 +21,11 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.analysis import analyze_compiled, param_counts, roofline_terms
 from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.launch import inputs as I
 from repro.launch.mesh import make_plan, make_production_mesh
-from repro.models import model
 from repro.train.step import make_train_step, make_serve_step, make_prefill_step
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",

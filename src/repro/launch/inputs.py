@@ -7,7 +7,7 @@ dry-run lowers and compiles without touching HBM (there is none).
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -18,8 +18,6 @@ TPU adaptation notes:
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ Decode caches: per-decoder-layer self KV cache + precomputed cross KV.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

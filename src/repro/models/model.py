@@ -1,8 +1,7 @@
 """Model dispatch (decoder / encdec), sharding rules and the LM loss."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -64,7 +63,6 @@ def _leaf_rule(name: str, cfg: ModelConfig, plan: ShardingPlan):
     hs = attn_mod.head_spec(cfg, plan)
     kv_ok = (hs is not None and cfg.n_kv_heads % plan.tp == 0)
     kvs = hs if kv_ok else None
-    ep = moe_mod.use_ep(cfg, plan)
 
     rules = {
         "embedding": P(tp, fsdp),

@@ -17,8 +17,6 @@ smoke tests and the oracle for the sharded paths.
 """
 from __future__ import annotations
 
-import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -93,7 +91,6 @@ def _grouped_moe(x_local, router, w_gate, w_in, w_out, cfg, *, first, El, Ce,
     ``first``/``El`` select this shard's expert range (0/E when replicated).
     """
     E = cfg.moe.num_experts
-    T = x_local.shape[0]
     ids, gates, aux, z = _route(x_local, router, cfg)
     se, st, sg, gs = _sort_by_expert(ids, gates, E)
     # slot of each sorted assignment within its expert group

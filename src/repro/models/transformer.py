@@ -12,8 +12,7 @@ Caches are pytrees stacked along the scan dimension; decode steps scan over
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

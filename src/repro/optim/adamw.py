@@ -9,7 +9,6 @@ math is elementwise so any sharding of the state is legal.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

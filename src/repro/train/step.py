@@ -10,14 +10,13 @@ the cutting-plane selector running over the *sharded* gradient pytree —
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeConfig, ShardingPlan
+from repro.configs.base import ModelConfig, ShardingPlan
 from repro.core import robust
 from repro.models import model
 

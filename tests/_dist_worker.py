@@ -18,7 +18,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
-from repro.core import _compat, distributed, selection  # noqa: E402
+from repro.core import _compat, distributed  # noqa: E402
 
 assert jax.device_count() == n_dev, jax.devices()
 

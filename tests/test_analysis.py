@@ -1,5 +1,4 @@
 """Tests for the roofline analysis (HLO walker) and param counting."""
-import numpy as np
 import pytest
 
 import jax

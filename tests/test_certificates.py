@@ -242,8 +242,8 @@ def test_weighted_late_hit_lo_demoted_to_stall():
         partials=None, n=jnp.asarray(n, jnp.int32), k=wk,
         init_stats=init_stats, histogram=lying_histogram,
         weights_total=jnp.reshape(W, ()))
-    s, _, _ = selection.weighted_binned_loop_batched(ev, nbins=8, maxit=8,
-                                                     cap=1)
+    # the weighted leg of the ONE binned loop (ev.weighted selects it)
+    s, _, _ = selection.binned_loop_batched(ev, nbins=8, maxit=8, cap=1)
     # the lie arrives on sweep 2: the loop must stall the row unfinished
     # rather than certify yL (a non-element bin edge) as the answer
     assert not bool(s.found_exact[0])
@@ -257,8 +257,7 @@ def test_weighted_extreme_shortcuts_gated_on_seed_bracket():
     (cLw >= wk with the bracket far from the minimum) must NOT override the
     answer with xmin as EXACT_HIT — it falls through to the sorted-prefix
     chain.  Only a bracket still AT the extreme may certify through them."""
-    from repro.core.selection import (
-        BatchState, _assemble_answers_weighted)
+    from repro.core.selection import BatchState, _assemble_answers
 
     def state(yL, yR):
         one = lambda v: jnp.asarray([v], jnp.float32)
@@ -275,25 +274,25 @@ def test_weighted_extreme_shortcuts_gated_on_seed_bracket():
     zws = jnp.asarray([[1.0, 1.0]], jnp.float32)
     common = dict(cap=2, zs=zs, zws=zws, n_in=jnp.asarray([2], jnp.int32),
                   vnext=jnp.asarray([2.0], jnp.float32),
-                  w_le_v=jnp.asarray([6.0], jnp.float32),
+                  m_le_v=jnp.asarray([6.0], jnp.float32),
                   xmin=jnp.asarray([0.0], jnp.float32),
                   xmax=jnp.asarray([9.0], jnp.float32))
-    # cLw >= wk (flip) but yL moved off xmin: sorted-prefix answer, not xmin
-    res = _assemble_answers_weighted(
-        wkk, state(1.5, 3.0), cLw=jnp.asarray([5.0], jnp.float32),
-        w_lt_max=jnp.asarray([10.0], jnp.float32), **common)
+    # cLm >= wk (flip) but yL moved off xmin: sorted-prefix answer, not xmin
+    res = _assemble_answers(
+        wkk, state(1.5, 3.0), cLm=jnp.asarray([5.0], jnp.float32),
+        m_lt_max=jnp.asarray([10.0], jnp.float32), **common)
     assert float(res.value[0]) == 2.0
     assert int(res.status[0]) == selection.HYBRID_SORT
-    # w_lt_max < wk (flip) but yR moved off xmax: same fail-safe
-    res = _assemble_answers_weighted(
-        wkk, state(1.5, 3.0), cLw=jnp.asarray([4.0], jnp.float32),
-        w_lt_max=jnp.asarray([4.5], jnp.float32), **common)
+    # m_lt_max < wk (flip) but yR moved off xmax: same fail-safe
+    res = _assemble_answers(
+        wkk, state(1.5, 3.0), cLm=jnp.asarray([4.0], jnp.float32),
+        m_lt_max=jnp.asarray([4.5], jnp.float32), **common)
     assert float(res.value[0]) == 2.0
     assert int(res.status[0]) == selection.HYBRID_SORT
     # bracket still AT the extreme: the shortcut may certify
-    res = _assemble_answers_weighted(
-        wkk, state(0.0, 9.0), cLw=jnp.asarray([5.0], jnp.float32),
-        w_lt_max=jnp.asarray([10.0], jnp.float32), **common)
+    res = _assemble_answers(
+        wkk, state(0.0, 9.0), cLm=jnp.asarray([5.0], jnp.float32),
+        m_lt_max=jnp.asarray([10.0], jnp.float32), **common)
     assert float(res.value[0]) == 0.0
     assert int(res.status[0]) == selection.EXACT_HIT
 

@@ -419,23 +419,31 @@ def test_ops_dispatch_weighted():
 
 
 def test_selection_through_kernel_backend():
-    """End-to-end: CP selection driven by the Pallas (interpret) kernel."""
+    """End-to-end: CP selection driven by the Pallas (interpret) kernel
+    through a custom FnEvaluator (B=1 view of the unified batched engine)."""
     from repro.core import selection
-    from repro.core.objective import fg_from_partials
+    from repro.core.objective import FnEvaluator
 
     rng = np.random.default_rng(7)
     x = jnp.asarray(rng.standard_normal(20_000).astype(np.float32))
     n = x.size
     k = (n + 1) // 2
 
-    def eval_fn(t):
-        return fg_from_partials(
-            ops.fused_partials(x, t, backend="pallas_interpret"), n, k
-        )
+    def partials(t):
+        one = lambda v: jnp.reshape(v, (1,))
+        return tuple(one(p) for p in ops.fused_partials(
+            x, t.reshape(()), backend="pallas_interpret"))
 
-    s, xmin, xmax = selection._bracket_loop(
-        x, k, method="cp", maxit=64, cap=4096, eval_fn=eval_fn
-    )
-    res = selection._finalize(x, k, s, 4096, xmin, xmax)
+    def init_stats():
+        one = lambda v: jnp.reshape(v, (1,))
+        return (one(jnp.min(x)), one(jnp.max(x)),
+                one(jnp.mean(x, dtype=x.dtype)))
+
+    ev = FnEvaluator(partials, jnp.asarray(n, jnp.int32),
+                     jnp.asarray([k], jnp.int32), init_stats)
+    s, xmin, xmax = selection.bracket_loop_batched(
+        ev, method="cp", maxit=64, cap=4096)
+    res = selection._finalize_rows(
+        x[None, :], jnp.asarray([k], jnp.int32), s, 4096, xmin, xmax)
     expected = np.partition(np.asarray(x), k - 1)[k - 1]
-    np.testing.assert_equal(np.float32(res.value), expected)
+    np.testing.assert_equal(np.float32(res.value[0]), expected)

@@ -1,11 +1,10 @@
 """Tests for the robust-statistics layer (paper Sec. VI + framework glue)."""
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import _compat, robust, selection
+from repro.core import _compat, robust
 
 jax.config.update("jax_platform_name", "cpu")
 

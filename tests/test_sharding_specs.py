@@ -12,7 +12,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.launch import inputs as I
-from repro.launch.mesh import make_plan, make_production_mesh
+from repro.launch.mesh import make_plan
 from repro.models import model
 
 jax.config.update("jax_platform_name", "cpu")

@@ -2,13 +2,12 @@
 import os
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
-from repro.configs import SHAPES, get_config, local_plan
+from repro.configs import get_config, local_plan
 from repro.configs.base import ShapeConfig
 from repro.data import SyntheticPipeline, batch_for_shape
 from repro.models import model
@@ -105,8 +104,8 @@ def test_loop_checkpoint_restart(tmp_path):
     state2 = TrainState(params=out["state"].params, opt=out["state"].opt,
                         step=jnp.zeros((), jnp.int32))
     pipe2 = SyntheticPipeline(cfg, SMALL, seed=0, start_step=6)
-    out2 = fit(train_step=step, state=state2, pipeline=pipe2, steps=8,
-               ckpt=mgr, ckpt_every=4, log_every=100, log_fn=lambda s: None)
+    fit(train_step=step, state=state2, pipeline=pipe2, steps=8,
+        ckpt=mgr, ckpt_every=4, log_every=100, log_fn=lambda s: None)
     pipe2.close()
     assert mgr.latest_step() == 8
 
