@@ -1,0 +1,58 @@
+"""Subprocess worker: distributed psum-round counts, binned vs polish.
+
+Run as:  python benchmarks/_dist_rounds_worker.py <n_devices> <log2_n>
+Sets XLA_FLAGS *before* importing jax, solves the global median on a
+host-device mesh for both measures and both round schedules, checks
+exactness, and prints one ``DIST_ROUNDS_JSON {...}`` line for the parent
+bench to merge into BENCH_selection.json.
+"""
+import json
+import os
+import sys
+
+n_dev = int(sys.argv[1]) if len(sys.argv) > 1 else 4
+log2_n = int(sys.argv[2]) if len(sys.argv) > 2 else 20
+_kept = [f for f in os.environ.get("XLA_FLAGS", "").split()
+         if not f.startswith("--xla_force_host_platform_device_count")]
+os.environ["XLA_FLAGS"] = " ".join(
+    [f"--xla_force_host_platform_device_count={n_dev}"] + _kept)
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import _compat, distributed  # noqa: E402
+
+assert jax.device_count() == n_dev, jax.devices()
+
+
+def main():
+    mesh = _compat.make_mesh((n_dev,), ("data",))
+    rng = np.random.default_rng(0)
+    n = 1 << log2_n
+    x = rng.standard_normal(n).astype(np.float32)
+    xj = jnp.asarray(x)
+    k = (n + 1) // 2
+    want = np.partition(x, k - 1)[k - 1]
+    w = rng.integers(1, 4, n).astype(np.float32)
+    o = np.argsort(x, kind="stable")
+    cumw = np.cumsum(w[o].astype(np.float64))
+    wk = float(np.float32(0.5 * w.sum()))
+    wwant = x[o][min(np.searchsorted(cumw, wk, "left"), n - 1)]
+
+    rec = {"n": n, "n_dev": n_dev, "exact": True}
+    for method in ["binned", "binned_polish"]:
+        res = distributed.sharded_order_statistic(xj, k, mesh, P("data"),
+                                                  method=method)
+        assert np.float32(res.value) == want, (method, float(res.value))
+        rec[f"rounds_{method}"] = int(res.iters)
+        wres = distributed.sharded_weighted_order_statistic(
+            xj, jnp.asarray(w), wk, mesh, P("data"), method=method)
+        assert np.float32(wres.value) == wwant, (method, float(wres.value))
+        rec[f"rounds_{method}_weighted"] = int(wres.iters)
+    print("DIST_ROUNDS_JSON " + json.dumps(rec))
+
+
+if __name__ == "__main__":
+    main()

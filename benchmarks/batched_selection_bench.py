@@ -20,6 +20,15 @@ Three tentpole claims ride this bench:
   per-bin sums — the ``sweeps_polish`` column records the data-pass
   reduction vs plain ``binned`` (2 -> 1 at n = 1M on normal data), still
   bit-identical to ``np.partition``.
+* PR 5 (verified arithmetic binning): the ``hist_pass`` record compares one
+  CPU histogram sweep against one fused FG pass at n = 1M — the
+  searchsorted/scatter pass was ~25x a fused pass (why auto kept 'cp' on
+  CPU); the verified arithmetic pass (multiply/floor/clip slots + factored
+  one-hot reduction, counting-leg configuration) is what flipped
+  ``method=None`` to 'binned' everywhere.  The ``distributed`` record
+  (subprocess, forced host devices) tracks the psum-round counts:
+  polish-driven rounds solve the 1M median in 1 round vs binned's 2, both
+  measures.
 
 Emits the usual CSV rows plus one ``BENCH_JSON`` line; ``run(json_path=...)``
 (the ``benchmarks/run.py --json`` path) additionally writes the records to a
@@ -28,6 +37,9 @@ machine-readable perf-trajectory file (``BENCH_selection.json``).
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+import sys
 
 import numpy as np
 
@@ -36,6 +48,101 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
 from repro.core import selection
+from repro.kernels import ops, ref
+
+
+def _hist_pass_record(rows):
+    """One-histogram-sweep vs one-fused-FG-pass timings at n = 1M (jnp/CPU
+    path), interleaved medians at matched jit-call granularity."""
+    n = 1 << 20
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    nbins_jnp = selection.DEF_NBINS_JNP
+    lo, hi = jnp.float32(-4.0), jnp.float32(4.0)
+    e_jnp = ref.bin_edges(lo, hi, nbins_jnp)
+    e_128 = ref.bin_edges(lo, hi, selection.DEF_NBINS)
+    y = jnp.float32(0.01)
+
+    fg = jax.jit(lambda v: ops.fused_partials(v, y, backend="jnp"))
+    # the auto path's sweep: arithmetic slots, counting leg, no sums
+    arith = jax.jit(lambda v: ops.fused_histogram(
+        v, e_jnp, backend="jnp", impl="arithmetic", want_sums=False)[0])
+    # yesterday's pass: binary-search slots + scatter at the kernel nbins
+    ss128 = jax.jit(lambda v: ops.fused_histogram(
+        v, e_128, backend="jnp", impl="searchsorted"))
+    # interleave to share the machine's thermal/quota state
+    t_fg = min(timeit(fg, x), timeit(fg, x))
+    t_ar = min(timeit(arith, x), timeit(arith, x))
+    t_ss = timeit(ss128, x, reps=3)
+    t_fg = min(t_fg, timeit(fg, x))
+    # engine granularity, tightly interleaved (shared-instant machine
+    # state — CI/container CPU quotas swing several x over a bench run):
+    # one binned sweep vs one cp iteration as the solver pays them
+    k = jnp.asarray(n // 2 + 1, jnp.int32)
+    x2 = x.reshape(1, -1)
+    f_cp = jax.jit(lambda v: selection.select_rows(
+        v, k, method="cp", backend="jnp").value)
+    f_bin = jax.jit(lambda v: selection.select_rows(
+        v, k, method="binned", backend="jnp").value)
+    t_ecp = min(timeit(f_cp, x2, reps=3), timeit(f_cp, x2, reps=3))
+    t_ebin = min(timeit(f_bin, x2, reps=3), timeit(f_bin, x2, reps=3))
+    iters_cp = int(selection.select_rows(x2, k, method="cp",
+                                         backend="jnp").iters[0])
+    sweeps = int(selection.select_rows(x2, k, method="binned",
+                                       backend="jnp").iters[0])
+    per_sweep = t_ebin / max(sweeps, 1)
+    per_pass = t_ecp / max(iters_cp, 1)
+    rec = dict(
+        n=n, nbins_jnp=nbins_jnp, nbins_searchsorted=selection.DEF_NBINS,
+        us_fg_pass=t_fg * 1e6,
+        us_hist_arith=t_ar * 1e6,
+        us_hist_searchsorted_128=t_ss * 1e6,
+        ratio_arith_over_fg=t_ar / t_fg,
+        ratio_searchsorted_over_fg=t_ss / t_fg,
+        us_engine_cp_total=t_ecp * 1e6,
+        us_engine_binned_total=t_ebin * 1e6,
+        engine_iters_cp=iters_cp,
+        engine_sweeps_binned=sweeps,
+        ratio_engine_sweep_over_cp_pass=per_sweep / per_pass,
+        auto_method_jnp_1m=selection._resolve_method(None, n, "jnp"),
+    )
+    rows.append(("hist_arith_vs_fg/n=1M", t_ar * 1e6,
+                 f"{t_ar / t_fg:.2f}x fg (searchsorted: "
+                 f"{t_ss / t_fg:.1f}x)"))
+    rows.append(("engine_binned_vs_cp/n=1M", t_ebin * 1e6,
+                 f"cp={t_ecp * 1e6:.0f}us sweep/pass="
+                 f"{per_sweep / per_pass:.2f}x"))
+    return rec
+
+
+def _distributed_rounds_record(rows, n_dev=4, log2_n=20):
+    """Psum-round counts from the forced-host-device subprocess worker;
+    returns None (and keeps the bench green) if the worker can't run."""
+    worker = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "_dist_rounds_worker.py")
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(worker)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    try:
+        # bounded: a slow/overloaded runner skips the record (visibly, as
+        # "distributed": null) instead of eating the CI budget
+        out = subprocess.run(
+            [sys.executable, worker, str(n_dev), str(log2_n)],
+            capture_output=True, text=True, env=env, timeout=600)
+    except Exception as exc:  # pragma: no cover - environment-dependent
+        print(f"distributed rounds worker skipped: {exc}")
+        return None
+    for line in out.stdout.splitlines():
+        if line.startswith("DIST_ROUNDS_JSON "):
+            rec = json.loads(line[len("DIST_ROUNDS_JSON "):])
+            rows.append((
+                f"dist_rounds_polish/n_dev={n_dev}/n={1 << log2_n}",
+                rec["rounds_binned_polish"],
+                f"binned={rec['rounds_binned']} weighted_polish="
+                f"{rec['rounds_binned_polish_weighted']}"))
+            return rec
+    print("distributed rounds worker failed:\n", out.stdout, out.stderr)
+    return None
 
 
 def run(full: bool = False, json_path: str | None = None):
@@ -168,10 +275,15 @@ def run(full: bool = False, json_path: str | None = None):
             / times["weighted_binned"],
         ))
 
+    # ---- histogram-pass microbench + distributed round counts ------------
+    hist_rec = _hist_pass_record(rows)
+    dist_rec = _distributed_rounds_record(rows)
+
     emit(rows)
     payload = {"bench": "batched_selection", "exact": True,
                "backend": jax.default_backend(), "grid": records,
-               "weighted_grid": wrecords}
+               "weighted_grid": wrecords, "hist_pass": hist_rec,
+               "distributed": dist_rec}
     print("BENCH_JSON " + json.dumps(payload))
     if json_path is not None:
         with open(json_path, "w") as f:

@@ -11,10 +11,13 @@ Two primitives, both ``shard_map``-native:
   on the counting leg, so the wire carries it once), each cutting-plane
   round psums the additive FG partials — the paper's "partial sums from
   several GPUs are added together", except the combine is an ICI all-reduce
-  instead of a CPU hop.  The hybrid finalize compacts *per shard* (fixed
-  local capacity), ``all_gather``s the tiny buffers and sorts — the paper's
-  small-array ``z`` step (carrying the aligned weight buffers on the
-  weighted leg).
+  instead of a CPU hop.  ``method='binned_polish'`` additionally psums the
+  per-slot SUM vector and drives the next round's edge placement with the
+  globally-reconstructed straddling-bin centroid (``selection.polish_edges``)
+  — one round saved at large n for ``nbins + 2`` extra wire scalars per
+  round.  The hybrid finalize compacts *per shard* (fixed local capacity),
+  ``all_gather``s the tiny buffers and sorts — the paper's small-array
+  ``z`` step (carrying the aligned weight buffers on the weighted leg).
 
 * :func:`median_across_axis` — vectorized coordinate-wise order statistics
   *across* a mesh axis (n = axis size per coordinate, millions of
@@ -53,6 +56,10 @@ from repro.core.objective import (
 )
 
 AxisNames = Sequence[str] | str
+
+# round schedules of the 1-D distributed primitive ('auto' resolves
+# statically by the global element count, mirroring the local engine)
+DIST_METHODS = ("binned", "binned_polish", "cp", "auto")
 
 
 def _axes_tuple(axes) -> tuple:
@@ -106,6 +113,7 @@ class _DistState(NamedTuple):
     t_exact: jax.Array
     found_exact: jax.Array
     it: jax.Array
+    tp: jax.Array         # carried in-bin CP cut (drives the polish edges)
 
 
 def local_order_statistic(
@@ -119,6 +127,7 @@ def local_order_statistic(
     method: str = "binned",
     nbins: int = selection.DEF_NBINS,
     weights: Optional[jax.Array] = None,
+    binned_impl: Optional[str] = None,
 ) -> selection.SelectResult:
     """k-th smallest of the *global* (sharded) array; call inside shard_map.
 
@@ -140,17 +149,42 @@ def local_order_statistic(
     COUNTS always stay per-shard (they feed the local cap bookkeeping); on
     the counting leg the psum'd counts double as the measure vector, so the
     wire cost is unchanged from the pre-unification engine on both legs.
+
+    ``method='binned_polish'`` drives the rounds with the in-bin CP cut:
+    each round ALSO psums the ``(nbins + 2,)`` per-slot sum vector (the
+    only extra wire cost), reconstructs the straddling bin's mass centroid
+    ``Σ_bin (w·)x / Σ_bin mass`` globally, and hands the cut to
+    ``selection.polish_edges`` for the NEXT round's realized edges — the
+    answer's neighborhood is then resolved at ~``2^-(nbins/4)`` of the
+    bracket instead of ``1/nbins``, trading ``nbins + 2`` wire scalars per
+    round for a round saved (2 -> 1 psum rounds at n = 1M, both measures —
+    see BENCH_selection.json ``distributed``).  Same fp contract as the
+    local engine: the cut steers edge PLACEMENT only, narrowing and
+    certificates run on the psum'd measured prefixes through the one
+    ``selection.binned_descent_step``, so a garbage centroid costs at most
+    a round, never exactness.
+
+    ``method='auto'`` mirrors the local engine's resolution (static by the
+    global element count): 'binned' for ``n >= selection.BINNED_MIN_N``,
+    'cp' below — and stays on plain 'binned' until the polish schedule is
+    TPU-validated.  ``binned_impl`` routes the LOCAL histogram pass's jnp
+    slotting exactly as in ``selection.select_rows``.
     """
     x_local = x_local.reshape(-1)
     n_local = x_local.size
     axes_t = _axes_tuple(axes)
+    if method == "auto":
+        # psum of a python int constant-folds to the static global count
+        n_glob = jax.lax.psum(n_local, axes_t)
+        method = "binned" if n_glob >= selection.BINNED_MIN_N else "cp"
     weighted = weights is not None
     if weighted:
         weights = jnp.asarray(weights).reshape(-1)
     # the evaluator owns the data layout AND the measure: local fused pass
     # (Pallas on TPU) + psum of the additive partials is the whole
     # multi-device story
-    ev = ShardedEvaluator(x_local, k, axes, backend=backend, weights=weights)
+    ev = ShardedEvaluator(x_local, k, axes, backend=backend, weights=weights,
+                          binned_impl=binned_impl)
     kk = ev.k
     dtype = x_local.dtype
     wl = weights.astype(kk.dtype) if weighted else None
@@ -169,12 +203,19 @@ def local_order_statistic(
         gL0 = alpha * (1.0 / nf) - beta * (nf - 1.0) / nf
         gR0 = alpha * (nf - 1.0) / nf - beta * (1.0 / nf)
 
+    fL0 = beta * (xmean - xmin)
+    fR0 = alpha * (xmax - xmean)
+    # analytic Kelley intersection seeds the polish's first in-bin cut
+    # (mirrors selection.binned_loop_batched's polish seeding)
+    t0 = (fR0 - fL0 + xmin * gL0 - xmax * gR0) / (gL0 - gR0)
+    bad0 = ~jnp.isfinite(t0) | (t0 <= xmin) | (t0 >= xmax)
+    t0 = jnp.where(bad0, 0.5 * (xmin + xmax), t0).astype(dtype)
     s0 = _DistState(
         yL=xmin,
-        fL=beta * (xmean - xmin),
+        fL=fL0,
         gL=gL0,
         yR=xmax,
-        fR=alpha * (xmax - xmean),
+        fR=fR0,
         gR=gR0,
         loc_cleL=_pcast_varying(jnp.asarray(0, jnp.int32), axes_t),
         loc_cleR=_pcast_varying(jnp.asarray(n_local, jnp.int32), axes_t),
@@ -182,6 +223,7 @@ def local_order_statistic(
         t_exact=jnp.asarray(jnp.nan, dtype),
         found_exact=jnp.asarray(False),
         it=jnp.asarray(0, jnp.int32),
+        tp=t0,
     )
 
     def cond(carry):
@@ -216,7 +258,10 @@ def local_order_statistic(
             t_exact=jnp.where(exact, t, s.t_exact),
             found_exact=s.found_exact | exact,
             it=s.it + 1,
+            tp=s.tp,
         ), stalled
+
+    polish = method == "binned_polish"
 
     def binned_body(carry):
         from repro.kernels.ref import bin_edges  # deferred: core <-> kernels
@@ -226,10 +271,16 @@ def local_order_statistic(
         # the narrowing decision (the exactness contract); the cross-device
         # combine is a psum of the slot-measure vector (additive, exactly
         # like the FG partials) — the slot counts stay local for the
-        # per-shard cap bookkeeping
-        edges = bin_edges(s.yL, s.yR, nbins)
-        cnt_loc, mass_loc, _ = ev.local_histogram(edges)
-        cum = jnp.cumsum(_psum(mass_loc, axes)[:-1])
+        # per-shard cap bookkeeping.  Polish rounds place the edges around
+        # the carried cut instead of uniformly.
+        if polish:
+            edges = selection.polish_edges(s.yL, s.yR, s.tp, nbins)
+        else:
+            edges = bin_edges(s.yL, s.yR, nbins)
+        cnt_loc, mass_loc, msum_loc = ev.local_histogram(edges,
+                                                         need_msum=polish)
+        mass = _psum(mass_loc, axes)
+        cum = jnp.cumsum(mass[:-1])
         # the narrowing decision + exactness certificates are the one shared
         # implementation in selection.binned_descent_step
         yLn, yRn, _, _, jm1, jstar, hit_lo, exact, stall = \
@@ -246,6 +297,20 @@ def local_order_statistic(
         upd = ~exact & ~stall
         loc_cleL = jnp.where(upd, locL, s.loc_cleL)
         loc_cleR = jnp.where(upd, locR, s.loc_cleR)
+        if polish:
+            # one extra (nbins + 2,) psum reconstructs the straddling bin's
+            # GLOBAL mass centroid — the in-bin support-line intersection
+            # (see selection.binned_loop_batched); guard degenerate bins
+            msum = _psum(msum_loc, axes)
+            mbin = mass[jstar].astype(msum.dtype)
+            sbin = msum[jstar]
+            tcut = sbin / jnp.where(mbin > 0, mbin, 1)
+            good = (mbin > 0) & jnp.isfinite(tcut)
+            tcut = jnp.where(good, jnp.clip(tcut, yLn, yRn),
+                             0.5 * (yLn + yRn)).astype(s.yL.dtype)
+            tp_n = jnp.where(upd, tcut, s.tp)
+        else:
+            tp_n = s.tp
         return _DistState(
             yL=jnp.where(upd, yLn, s.yL), fL=s.fL, gL=s.gL,
             yR=jnp.where(upd, yRn, s.yR), fR=s.fR, gR=s.gR,
@@ -255,33 +320,36 @@ def local_order_statistic(
                               s.t_exact),
             found_exact=s.found_exact | exact,
             it=s.it + 1,
+            tp=tp_n,
         ), stalled | stall
 
-    if method == "binned":
+    if method in ("binned", "binned_polish"):
         # brackets narrow to realized f32 edge values — keep the bracket
         # state at (at least) the kernels' f32 accumulation precision
         dt = jnp.promote_types(dtype, jnp.float32)
         s0 = s0._replace(yL=s0.yL.astype(dt), yR=s0.yR.astype(dt),
-                         t_exact=s0.t_exact.astype(dt))
+                         t_exact=s0.t_exact.astype(dt),
+                         tp=s0.tp.astype(dt))
         body = binned_body
     elif method == "cp":
         body = cp_body
     else:
-        raise ValueError(f"unknown method {method!r}; one of ('binned', "
-                         "'cp')")
+        raise ValueError(f"unknown method {method!r}; one of "
+                         f"{DIST_METHODS}")
 
     s, _ = jax.lax.while_loop(cond, body, (s0, jnp.asarray(False)))
 
     # ---- distributed hybrid finalize (compact per shard, gather, sort) ----
+    # per-shard compaction by selection.rank_compact (the one rank-gather
+    # implementation), then the tiny buffers ride an all_gather
     big = jnp.asarray(jnp.inf, dtype)
     mask_in = (x_local > s.yL) & (x_local <= s.yR)
-    n_in = _psum(jnp.sum(mask_in, dtype=jnp.int32), axes)
-    loc_in = jnp.sum(mask_in, dtype=jnp.int32)
-    pos = jnp.cumsum(mask_in.astype(jnp.int32)) - 1
-    idx = jnp.where(mask_in, jnp.minimum(pos, cap_local), cap_local)
-    z = jnp.full((cap_local + 1,), big, dtype).at[idx].set(
-        jnp.where(mask_in, x_local, big))
-    z_all = z[:cap_local]
+    cols = [(x_local, big)]
+    if weighted:
+        cols.append((wl, jnp.zeros((), wl.dtype)))
+    bufs, loc_in = selection.rank_compact(mask_in, cap_local, cols)
+    n_in = _psum(loc_in, axes)
+    z_all = bufs[0]
     for ax in axes_t:
         z_all = jax.lax.all_gather(z_all, ax).reshape(-1)
     ok_gather = _pmax(loc_in, axes) <= cap_local
@@ -290,9 +358,7 @@ def local_order_statistic(
     if weighted:
         # gather the aligned weight buffers and resolve by sorted prefix
         # masses — the weighted generalization of indexing at k - cL
-        zw = jnp.zeros((cap_local + 1,), wl.dtype).at[idx].set(
-            jnp.where(mask_in, wl, 0))
-        zw_all = zw[:cap_local]
+        zw_all = bufs[1]
         for ax in axes_t:
             zw_all = jax.lax.all_gather(zw_all, ax).reshape(-1)
         order = jnp.argsort(z_all)
@@ -355,7 +421,9 @@ def local_weighted_order_statistic(
     maxit: int = 64,
     cap_local: int = 4096,
     backend: Optional[str] = None,
+    method: str = "binned",
     nbins: int = selection.DEF_NBINS,
+    binned_impl: Optional[str] = None,
 ) -> selection.SelectResult:
     """Weighted order statistic of the *global* sharded array: the smallest
     element whose global cumulative weight reaches ``wk``.  Call inside
@@ -367,10 +435,19 @@ def local_weighted_order_statistic(
     per-shard for the cap bookkeeping), and the finalize all_gathers
     per-shard (value, weight) pair buffers and resolves by sorted prefix
     weights — the weighted analogue of the paper's small-array ``z`` step.
+    ``method`` in {'binned', 'binned_polish', 'cp', 'auto'} as in
+    :func:`local_order_statistic` (the cp rounds psum the six weighted
+    partials; the polish psums the per-slot ``Σ w·x`` vector too and
+    saves a round at large n; 'auto' may resolve to 'cp' below
+    ``BINNED_MIN_N``).
     """
+    if method not in DIST_METHODS:
+        raise ValueError(f"unknown method {method!r}; one of "
+                         f"{DIST_METHODS}")
     return local_order_statistic(
         x_local, wk, axes, maxit=maxit, cap_local=cap_local,
-        backend=backend, method="binned", nbins=nbins, weights=w_local)
+        backend=backend, method=method, nbins=nbins, weights=w_local,
+        binned_impl=binned_impl)
 
 
 def sharded_order_statistic(

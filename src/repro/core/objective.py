@@ -212,18 +212,22 @@ class Evaluator(Protocol):
     problem, bin the data against the caller-supplied REALIZED bracket
     edges ``(B, nbins + 1)`` (built once per sweep by the engine via
     ``kernels.ref.bin_edges`` — implementations must only COMPARE against
-    them, never recompute edge arithmetic) and return additive
-    ``(cnt, mass, msum)`` slot vectors of shape ``(B, nbins + 2)`` (slot
-    layout documented in ``kernels.ref.cp_histogram_ref``):
+    them, never recompute edge arithmetic; the verified arithmetic slotting
+    honors this by checking its candidate against that same array) and
+    return additive ``(cnt, mass, msum)`` slot vectors of shape
+    ``(B, nbins + 2)`` (slot layout documented in
+    ``kernels.ref.searchsorted_slots``):
 
     * ``cnt``  — int32 element counts (feed the cap-based stopping rule);
     * ``mass`` — the per-slot measure (the narrowing signal; on the
       counting leg this IS ``cnt``, returned aliased — no extra compute);
     * ``msum`` — per-slot ``sum(w_i * x_i)`` (``sum(x_i)`` on the counting
-      leg) — the in-bin CP-polish ingredient.  Implementations whose
-      transport makes the sums costly (the distributed evaluators) may
-      return ``None`` in its place; such evaluators cannot drive the
-      polish.
+      leg) — the in-bin CP-polish ingredient, DEMAND-DRIVEN: the engine
+      passes ``need_msum=True`` only on polish sweeps, and implementations
+      may return ``None`` whenever it is False (the jnp arithmetic pass
+      skips the sums entirely; the distributed evaluators skip their wire
+      bytes).  An implementation that cannot produce sums at all simply
+      always returns ``None`` — such evaluators cannot drive the polish.
 
     One sweep narrows every live bracket by a factor of ``nbins`` —
     log2(nbins) bisection-equivalents per data pass — and, like the FG
@@ -240,7 +244,7 @@ class Evaluator(Protocol):
     def init_stats(self) -> tuple[jax.Array, jax.Array, jax.Array]: ...
 
     def histogram(
-        self, edges: jax.Array
+        self, edges: jax.Array, need_msum: bool = False
     ) -> tuple[jax.Array, jax.Array, Optional[jax.Array]]: ...
 
 
@@ -265,14 +269,21 @@ class RowsEvaluator:
     row's total weight ``W``), the partials carry weight masses in the
     measure fields, and ``histogram`` binning emits the weighted
     ``(cnt, mass, msum)`` slot triple.
+
+    ``binned_impl`` routes the jnp histogram pass's slot assignment
+    ('searchsorted' | 'arithmetic'; None lets ``kernels.ops`` pick — see
+    ``_resolve_impl`` there); both are bit-identical, the knob exists for
+    differential testing and perf bisection.
     """
 
     def __init__(self, x: jax.Array, k, *, backend: str | None = None,
-                 weights: jax.Array | None = None):
+                 weights: jax.Array | None = None,
+                 binned_impl: str | None = None):
         from repro.kernels import ops as kops  # deferred: core <-> kernels
 
         self._kops = kops
         self._backend = backend
+        self._binned_impl = binned_impl
         self.x = x
         self.n = jnp.asarray(x.shape[1], jnp.int32)
         self.weighted = weights is not None
@@ -296,12 +307,14 @@ class RowsEvaluator:
             return wfg_from_partials(self._partials(y), self.W, self.k)
         return fg_from_partials(self._partials(y), self.n, self.k)
 
-    def histogram(self, edges):
+    def histogram(self, edges, need_msum=False):
         if self.weighted:
             return self._kops.fused_weighted_histogram_batched(
-                self.x, self.w, edges, backend=self._backend)
+                self.x, self.w, edges, backend=self._backend,
+                impl=self._binned_impl, want_sums=need_msum)
         cnt, bsum = self._kops.fused_histogram_batched(
-            self.x, edges, backend=self._backend)
+            self.x, edges, backend=self._backend, impl=self._binned_impl,
+            want_sums=need_msum)
         return cnt, cnt, bsum  # counting measure: the counts ARE the mass
 
     def init_stats(self):
@@ -325,11 +338,13 @@ class SharedEvaluator:
     """
 
     def __init__(self, x: jax.Array, ks, *, backend: str | None = None,
-                 weights: jax.Array | None = None):
+                 weights: jax.Array | None = None,
+                 binned_impl: str | None = None):
         from repro.kernels import ops as kops  # deferred: core <-> kernels
 
         self._kops = kops
         self._backend = backend
+        self._binned_impl = binned_impl
         self.x = x = x.reshape(-1)
         self.n = jnp.asarray(x.size, jnp.int32)
         self.weighted = weights is not None
@@ -351,12 +366,14 @@ class SharedEvaluator:
             return wfg_from_partials(self._partials(y), self.W, self.k)
         return fg_from_partials(self._partials(y), self.n, self.k)
 
-    def histogram(self, edges):
+    def histogram(self, edges, need_msum=False):
         if self.weighted:
             return self._kops.fused_weighted_histogram_multi(
-                self.x, self.w, edges, backend=self._backend)
+                self.x, self.w, edges, backend=self._backend,
+                impl=self._binned_impl, want_sums=need_msum)
         cnt, bsum = self._kops.fused_histogram_multi(
-            self.x, edges, backend=self._backend)
+            self.x, edges, backend=self._backend, impl=self._binned_impl,
+            want_sums=need_msum)
         return cnt, cnt, bsum  # counting measure: the counts ARE the mass
 
     def init_stats(self):
@@ -381,13 +398,15 @@ class ShardedEvaluator:
 
     def __init__(self, x_local: jax.Array, k, axes, *,
                  backend: str | None = None,
-                 weights: jax.Array | None = None):
+                 weights: jax.Array | None = None,
+                 binned_impl: str | None = None):
         from repro.kernels import ops as kops  # deferred: core <-> kernels
 
         self.x_local = x_local = x_local.reshape(-1)
         self.axes = axes = (axes,) if isinstance(axes, str) else tuple(axes)
         self._kops = kops
         self._backend = backend
+        self._binned_impl = binned_impl
         self.n = jax.lax.psum(jnp.asarray(x_local.size, jnp.int32), axes)
         self.weighted = weights is not None
         if self.weighted:
@@ -406,36 +425,43 @@ class ShardedEvaluator:
     def __call__(self, y: jax.Array) -> FG:
         return self.combine(self._partials1(y))
 
-    def local_histogram(self, edges):
+    def local_histogram(self, edges, need_msum=False):
         """This shard's un-psum'd ``(cnt, mass, msum)`` slot triple (shape
         ``(nbins + 2,)`` each) — the binned analogue of
         :meth:`local_partials`; the distributed binned loop bounds the
         PER-SHARD in-bracket count from the local counts while the psum of
-        the mass vector drives the narrowing."""
+        the mass vector drives the narrowing.  ``need_msum`` requests the
+        per-slot sums (the polish ingredient); without it the jnp
+        arithmetic pass skips them."""
         if self.weighted:
             return self._kops.fused_weighted_histogram(
-                self.x_local, self.w_local, edges, backend=self._backend)
+                self.x_local, self.w_local, edges, backend=self._backend,
+                impl=self._binned_impl, want_sums=need_msum)
         cnt, bsum = self._kops.fused_histogram(
-            self.x_local, edges, backend=self._backend)
+            self.x_local, edges, backend=self._backend,
+            impl=self._binned_impl, want_sums=need_msum)
         return cnt, cnt, bsum  # counting measure: the counts ARE the mass
 
-    def histogram(self, edges):
+    def histogram(self, edges, need_msum=False):
         """Binned pass over the GLOBAL array: local histogram + one psum of
         the ``(nbins + 2,)`` mass vector — additive across shards exactly
         like the FG partials (B = 1 view: ``(nbins + 1,)`` edges).  On the
         counting leg the psum'd counts serve as both ``cnt`` and ``mass``
         (one vector on the wire); the weighted leg psums the mass vector
         next to the counts (``2 * (nbins + 2)`` scalars, still no data
-        movement).  The per-bin sums return as ``None``: psumming them
-        would pay wire bytes the remote binned loop never reads (the
-        distributed regime keeps uniform edges)."""
+        movement).  The per-bin sums ride the wire ONLY on demand
+        (``need_msum=True``, the polish rounds): one extra ``(nbins + 2,)``
+        psum buys the globally-reconstructed straddling-bin centroid; plain
+        binned rounds keep the old wire cost and return ``None``."""
         if self.weighted:
-            cnt, wcnt, _wsum = self.local_histogram(edges)
+            cnt, wcnt, wsum = self.local_histogram(edges,
+                                                   need_msum=need_msum)
             return (jax.lax.psum(cnt, self.axes),
-                    jax.lax.psum(wcnt, self.axes), None)
-        cnt, _, _bsum = self.local_histogram(edges)
+                    jax.lax.psum(wcnt, self.axes),
+                    jax.lax.psum(wsum, self.axes) if need_msum else None)
+        cnt, _, bsum = self.local_histogram(edges, need_msum=need_msum)
         c = jax.lax.psum(cnt, self.axes)
-        return c, c, None
+        return c, c, (jax.lax.psum(bsum, self.axes) if need_msum else None)
 
     def local_partials(self, y: jax.Array):
         """This shard's un-psum'd additive partials (for shard-local
@@ -483,7 +509,10 @@ class FnEvaluator:
 
     ``histogram(edges) -> (cnt, mass, msum)`` (edges ``(B, nbins + 1)``,
     outputs ``(B, nbins + 2)``; ``msum`` may be ``None``) is optional;
-    without it the evaluator only drives the FG methods.
+    without it the evaluator only drives the FG methods.  The closure takes
+    only ``edges`` — the engine's ``need_msum`` hint is absorbed here (a
+    closure that can skip sum transport may simply always return ``None``
+    for ``msum`` and forgo the polish).
 
     Weighted leg: with ``weights_total=W`` the ``partials`` closure must
     return the six weighted partials, ``k`` is the target mass ``wk``, and
@@ -506,7 +535,7 @@ class FnEvaluator:
             return wfg_from_partials(self._partials(y), self.W, self.k)
         return fg_from_partials(self._partials(y), self.n, self.k)
 
-    def histogram(self, edges):
+    def histogram(self, edges, need_msum=False):
         if self._histogram is None:
             raise NotImplementedError(
                 "this FnEvaluator was built without a histogram closure; "

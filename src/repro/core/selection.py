@@ -56,10 +56,15 @@ Methods (shared skeleton, they differ only in the next-pivot proposal):
 Each iteration costs exactly one fused pass over the data — the paper's
 ``maxit + O(1)`` parallel reductions — regardless of how many problems ride
 in the batch; ``binned`` needs ~3 such passes where ``cp`` needs ~15.
-``method=None`` (the default) resolves per backend: ``binned`` for
-``n >= BINNED_MIN_N`` on the Pallas kernel path (where a histogram sweep
-costs the same HBM traffic as an FG pass), ``cp`` otherwise (the CPU jnp
-histogram is scatter-bound — see ``_resolve_method``).
+``method=None`` (the default) resolves to ``binned`` for
+``n >= BINNED_MIN_N`` on EVERY backend: the Pallas kernels bin in-register
+(a sweep costs the same HBM traffic as an FG pass), and the jnp path's
+verified arithmetic binning (``kernels.ref.bin_slots``: multiply/floor/clip
+slots checked against the realized edges, factored one-hot reduction)
+brought the CPU sweep from ~25-70x a fused pass down to ~2-4x (below one
+cp engine-iteration at engine granularity) — so 2-3 sweeps beat ~9 cp
+passes end-to-end at 1M where binned used to lose 10x — see
+``_resolve_method`` / ``_resolve_nbins`` and BENCH_selection.json.
 
 Exactness: unlike the paper (which stops on a float tolerance and then scans
 for the largest ``x_i <= y~``), we carry the measures through the loop PER
@@ -126,34 +131,78 @@ METHODS = ("binned", "binned_polish", "cp", "cp_hybrid", "bisection",
 # bookkeeping isn't worth it and Kelley cuts converge in microseconds.
 BINNED_MIN_N = 1 << 16
 
-# Sub-intervals per histogram sweep (one sweep = log2(128) = 7
-# bisection-equivalents of bracket narrowing); the kernels take the bin
-# count from the edge array the engine builds with this default.
+# Sub-intervals per histogram sweep on the Pallas kernel path (one sweep =
+# log2(128) = 7 bisection-equivalents of bracket narrowing); the kernels
+# take the bin count from the edge array the engine builds.
 DEF_NBINS = 128
+
+# jnp-path default: the verified-arithmetic histogram's factored one-hot
+# reduction scales with the slot count, and a 16-bin sweep (4 bisection
+# equivalents) already resolves 1M -> cap in 2 sweeps — the CPU-measured
+# knee (see BENCH_selection.json hist_pass).
+DEF_NBINS_JNP = 16
+
+BINNED_IMPLS = (None, "searchsorted", "arithmetic")
+
+
+def _kernel_path(backend: Optional[str]) -> bool:
+    from repro.kernels.ops import _on_tpu  # deferred: core <-> kernels
+
+    return backend in ("pallas", "pallas_interpret") or (
+        backend is None and _on_tpu())
 
 
 def _resolve_method(method: Optional[str], n: int,
                     backend: Optional[str] = None) -> str:
-    """``None``/``'auto'`` -> 'binned' on the kernel path for large n.
+    """``None``/``'auto'`` -> 'binned' for large n on EVERY backend.
 
     The binned descent is a bandwidth trade: each sweep touches the data
-    once (like a fused FG pass) but buys log2(nbins) bisection steps, so it
-    wins wherever the pass cost is HBM-bound — the Pallas kernel path.  On
-    the CPU jnp fallback a histogram sweep is scatter/searchsorted-bound
-    (~25x a fused pass at 1M elements, see BENCH_selection.json), so auto
-    keeps 'cp' there; callers can still force ``method='binned'`` /
-    ``'binned_polish'`` (exact on every backend, and the pass-count
-    telemetry is what the perf trajectory tracks).  Auto stays on plain
-    'binned' until the polish schedule is TPU-validated (see ROADMAP).
+    once but buys log2(nbins) bisection steps.  On the Pallas kernel path a
+    sweep costs the same HBM traffic as a fused FG pass; on the CPU jnp
+    path the verified arithmetic-binning pass (multiply/floor/clip slots +
+    factored one-hot reduction, see ``kernels.ref.bin_slots``) brought the
+    sweep from ~25-70x a fused pass down to ~2-4x at 1M
+    (BENCH_selection.json, ``hist_pass``), so 2-3 sweeps beat ~9 cp
+    passes end-to-end (binned used to lose ~10x on CPU) and auto picks
+    'binned' everywhere above ``BINNED_MIN_N`` — the schedule whose pass
+    count scales as log(nbins) per data touch.  Auto stays on plain
+    'binned' (not 'binned_polish') until the polish schedule is
+    TPU-validated (see ROADMAP).
     """
     if method in (None, "auto"):
-        from repro.kernels.ops import _on_tpu  # deferred: core <-> kernels
-
-        kernel_path = backend == "pallas" or (backend is None and _on_tpu())
-        return "binned" if (kernel_path and n >= BINNED_MIN_N) else "cp"
+        return "binned" if n >= BINNED_MIN_N else "cp"
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; one of {METHODS}")
     return method
+
+
+def _resolve_nbins(nbins: Optional[int], backend: Optional[str],
+                   dtype=None) -> int:
+    """``None`` -> the backend-tuned sweep width: ``DEF_NBINS`` (128) where
+    the histogram kernels bin in-register (slot count is nearly free),
+    ``DEF_NBINS_JNP`` (16) on the jnp path where the factored reduction's
+    cost is ~linear in the slot count.  Both resolve 1M -> cap in 2 sweeps;
+    explicit values always win.
+
+    ``dtype``: the data's (promoted) dtype — f64 inputs are rerouted by
+    ``kernels.ops`` to the jnp oracle even when the kernel path was
+    requested (``pallas_interpret`` deliberately excepted), so their
+    sweeps get the jnp-tuned width too.
+    """
+    if nbins is not None:
+        return int(nbins)
+    kernel = _kernel_path(backend)
+    if (kernel and backend != "pallas_interpret" and dtype is not None
+            and jnp.dtype(dtype) == jnp.float64):
+        kernel = False  # the f64 reroute lands this pass on the jnp oracle
+    return DEF_NBINS if kernel else DEF_NBINS_JNP
+
+
+def _check_binned_impl(binned_impl: Optional[str]) -> Optional[str]:
+    if binned_impl not in BINNED_IMPLS:
+        raise ValueError(f"unknown binned_impl {binned_impl!r}; one of "
+                         f"{BINNED_IMPLS}")
+    return binned_impl
 
 # Status codes for SelectResult.status
 EXACT_HIT = 0       # pivot certified equal to x_(k) during iterations
@@ -428,7 +477,12 @@ def polish_edges(lo, hi, t, nbins: int):
     shared by the histogram pass and the narrowing decision — the same
     contract as ``kernels.ref.bin_edges``, which supplies the uniform
     half.  A garbage cut (NaN / out of bracket) degrades to the bracket
-    midpoint; the certificates never trust the cut itself.
+    midpoint; the certificates never trust the cut itself.  The endpoint
+    anchoring is pinned AFTER the sort: on FTZ hardware a denormal-scale
+    bracket makes the ladder values compare DAZ-equal, and the sort may
+    otherwise scramble which bit pattern lands at the ends (every value is
+    already clipped into ``[lo, hi]``, so the pin preserves the platform
+    ordering).
     """
     from repro.kernels.ref import bin_edges  # deferred: core <-> kernels
 
@@ -451,7 +505,8 @@ def polish_edges(lo, hi, t, nbins: int):
     parts = [base, ladder]
     if extra:
         parts.append(jnp.broadcast_to(tc[..., None], tc.shape + (extra,)))
-    return jnp.sort(jnp.concatenate(parts, axis=-1), axis=-1)
+    e = jnp.sort(jnp.concatenate(parts, axis=-1), axis=-1)
+    return e.at[..., 0].set(lo).at[..., -1].set(hi)
 
 
 def binned_loop_batched(
@@ -549,7 +604,7 @@ def binned_loop_batched(
             edges = polish_edges(s.yL, s.yR, s.tp, nbins)
         else:
             edges = bin_edges(s.yL, s.yR, nbins)
-        cnt, mass, msum = ev.histogram(edges)
+        cnt, mass, msum = ev.histogram(edges, need_msum=polish)
         # prefix measures at the realized edges drive the narrowing:
         # cum[..., j] = measure(x <= e_j)
         cum = jnp.cumsum(mass[..., :-1], axis=-1)
@@ -614,40 +669,60 @@ def _run_bracket_phase(ev, method, maxit, cap, nbins):
     return bracket_loop_batched(ev, method=method, maxit=maxit, cap=cap)
 
 
+def rank_compact(mask_in, cap: int, cols):
+    """First-``cap`` survivors of a 1-D mask by RANK GATHER.
+
+    The paper's ``copy_if`` as a static-shape gather: ``pos`` is each
+    element's inclusive survivor rank (a cumsum of the mask), so the i-th
+    survivor's index is ``searchsorted(pos, i + 1)`` — O(cap log n) cheap
+    gathers where a full-length scatter lowers to an O(n) serialized loop
+    on XLA:CPU (~20x the whole finalize at 1M, see BENCH_selection.json).
+    ``cols`` is a sequence of ``(values, pad)`` pairs gathered at the same
+    survivor indices (aligned buffers; ``pad`` fills slots past the last
+    survivor).  Returns ``(buffers, n_in)``.  Shared by the local finalize
+    (:func:`_compact_interval`) and the distributed per-shard finalize —
+    keep it the single implementation.
+    """
+    n_in = jnp.sum(mask_in, dtype=jnp.int32)
+    pos = jnp.cumsum(mask_in.astype(jnp.int32))
+    idx = jnp.minimum(
+        jnp.searchsorted(pos, jnp.arange(1, cap + 1, dtype=jnp.int32),
+                         side="left"),
+        mask_in.size - 1).astype(jnp.int32)
+    have = jnp.arange(cap) < n_in
+    return [jnp.where(have, v[idx], pad) for v, pad in cols], n_in
+
+
 def _compact_interval(x, w, yL, yR, cap):
     """ONE problem's phase-2 survivor compaction + fallback probes (1-D x).
 
-    The paper's ``copy_if`` as a static-shape gather: the open pivot
-    interval ``(yL, yR]`` lands in a ``(cap,)`` buffer (slot ``cap`` is the
-    overflow trash slot), alongside the measure certificates the answer
-    assembly needs — ``cLm = measure(x <= yL)``, the in-bracket count, the
-    next distinct value above ``yL`` and its inclusive measure (tie
-    fallback verification).  Everything downstream is O(cap), not O(n).
+    The open pivot interval ``(yL, yR]`` lands in a ``(cap,)`` buffer via
+    :func:`rank_compact` (first ``cap`` survivors in data order, +inf
+    pad), alongside the measure certificates the answer assembly needs —
+    ``cLm = measure(x <= yL)``, the in-bracket count, the next distinct
+    value above ``yL`` and its inclusive measure (tie fallback
+    verification).  Everything downstream is O(cap), not O(n).
 
     ``w=None`` is the counting leg: the measures are the int32 counts and
-    the weight buffer comes back ``None`` (no second scatter, no weight
-    reads).  With weights, the (value, weight) PAIRS land in aligned
-    buffers (trash slot ``cap``; pad values +inf, pad weights 0 so sorted
-    prefix masses are unaffected).
+    the weight buffer comes back ``None`` (no weight reads).  With
+    weights, the (value, weight) PAIRS land in aligned buffers via the
+    same rank indices (pad values +inf, pad weights 0 so sorted prefix
+    masses are unaffected).
     """
     big = jnp.asarray(jnp.inf, x.dtype)
     mask_in = (x > yL) & (x <= yR)
     cL = jnp.sum(x <= yL, dtype=jnp.int32)
-    n_in = jnp.sum(mask_in, dtype=jnp.int32)
-    pos = jnp.cumsum(mask_in.astype(jnp.int32)) - 1
-    idx = jnp.where(mask_in, jnp.minimum(pos, cap), cap)
-    z = jnp.full((cap + 1,), big, x.dtype).at[idx].set(
-        jnp.where(mask_in, x, big))
     vnext = jnp.min(jnp.where(x > yL, x, big))
     if w is None:
+        (z,), n_in = rank_compact(mask_in, cap, [(x, big)])
         m_le_v = jnp.sum(x <= vnext, dtype=jnp.int32)
-        return z[:cap], None, cL, n_in, vnext, m_le_v
+        return z, None, cL, n_in, vnext, m_le_v
     dtw = w.dtype
+    (z, zw), n_in = rank_compact(mask_in, cap,
+                                 [(x, big), (w, jnp.zeros((), dtw))])
     cLw = jnp.sum(jnp.where(x <= yL, w, 0), dtype=dtw)
-    zw = jnp.zeros((cap + 1,), dtw).at[idx].set(
-        jnp.where(mask_in, w, 0))
     w_le_v = jnp.sum(jnp.where(x <= vnext, w, 0), dtype=dtw)
-    return z[:cap], zw[:cap], cLw, n_in, vnext, w_le_v
+    return z, zw, cLw, n_in, vnext, w_le_v
 
 
 def _assemble_answers(kk, s: BatchState, cap, zs, zws, cLm, n_in, vnext,
@@ -855,7 +930,7 @@ def _map_bracket_back_shared(x, xt, s: BatchState) -> BatchState:
 @functools.partial(
     jax.jit,
     static_argnames=("method", "maxit", "cap", "transform", "backend",
-                     "nbins"),
+                     "nbins", "binned_impl"),
 )
 def select_rows(
     x: jax.Array,
@@ -866,7 +941,8 @@ def select_rows(
     cap: Optional[int] = None,
     transform: Optional[str] = None,
     backend: Optional[str] = None,
-    nbins: int = DEF_NBINS,
+    nbins: Optional[int] = None,
+    binned_impl: Optional[str] = None,
 ) -> SelectResult:
     """Rows-mode batched selection: ``x`` is (B, n), ``k`` scalar or (B,).
 
@@ -874,15 +950,19 @@ def select_rows(
     ``i`` solves the independent problem ``x[i], k[i]`` with the same
     exactness guarantees as the scalar solver (which is the B=1 view of this
     function).  ``method=None`` resolves to 'binned' for n >= BINNED_MIN_N
-    on the Pallas kernel path and 'cp' otherwise (see ``_resolve_method``);
-    ``nbins`` sizes the binned histogram sweeps.  ``backend`` selects the
-    fused data pass ('jnp' | 'pallas' | 'pallas_interpret', default: pallas
-    on TPU).
+    and 'cp' otherwise (see ``_resolve_method``); ``nbins`` sizes the
+    binned histogram sweeps (``None``: backend-tuned, see
+    ``_resolve_nbins``); ``binned_impl`` routes the jnp histogram slotting
+    ('searchsorted' | 'arithmetic' — bit-identical, for differential
+    testing).  ``backend`` selects the fused data pass ('jnp' | 'pallas' |
+    'pallas_interpret', default: pallas on TPU).
     """
     if x.ndim != 2:
         raise ValueError(f"select_rows wants (B, n) data, got {x.shape}")
     b, n = x.shape
     method = _resolve_method(method, n, backend)
+    nbins = _resolve_nbins(nbins, backend, x.dtype)
+    binned_impl = _check_binned_impl(binned_impl)
     if cap is None:
         cap = _default_cap_rows(n)
     cap = min(cap, n)
@@ -902,7 +982,8 @@ def select_rows(
     if transform == "log1p":
         xt = transforms.log1p_transform_rows(x)
         s, _, _ = _run_bracket_phase(
-            RowsEvaluator(xt, ks, backend=backend), method, maxit, cap,
+            RowsEvaluator(xt, ks, backend=backend,
+                          binned_impl=binned_impl), method, maxit, cap,
             nbins)
         s = _map_bracket_back_rows(x, xt, s)
         return _finalize_rows(x, ks, s, cap,
@@ -910,7 +991,7 @@ def select_rows(
     elif transform is not None:
         raise ValueError(f"unknown transform {transform!r}")
 
-    ev = RowsEvaluator(x, ks, backend=backend)
+    ev = RowsEvaluator(x, ks, backend=backend, binned_impl=binned_impl)
     s, xmin, xmax = _run_bracket_phase(ev, method, maxit, cap, nbins)
     return _finalize_rows(x, ks, s, cap, xmin, xmax)
 
@@ -924,14 +1005,15 @@ def order_statistic(
     cap: Optional[int] = None,
     transform: Optional[str] = None,
     backend: Optional[str] = None,
-    nbins: int = DEF_NBINS,
+    nbins: Optional[int] = None,
+    binned_impl: Optional[str] = None,
 ) -> SelectResult:
     """k-th smallest element of ``x`` (k is 1-indexed, may be traced).
 
     The ``B = 1`` view of :func:`select_rows`.  ``method`` in {"binned",
     "binned_polish", "cp", "cp_hybrid", "bisection", "golden", "brent",
-    "sort"}; ``None`` resolves to 'binned' for large n on the Pallas kernel
-    path, 'cp' otherwise (see ``_resolve_method``).
+    "sort"}; ``None`` resolves to 'binned' for large n, 'cp' otherwise
+    (see ``_resolve_method``).
     ``cp`` and ``cp_hybrid`` are aliases (the hybrid finalize is always on —
     it is what makes the result exact).  ``transform='log1p'`` applies the
     paper's monotone guard for extreme-valued data (Sec. V-D).
@@ -942,7 +1024,7 @@ def order_statistic(
     res = select_rows(
         x[None, :], jnp.asarray(k, jnp.int32).reshape(1),
         method=method, maxit=maxit, cap=cap, transform=transform,
-        backend=backend, nbins=nbins,
+        backend=backend, nbins=nbins, binned_impl=binned_impl,
     )
     return jax.tree.map(lambda a: a[0], res)
 
@@ -969,7 +1051,7 @@ def topk_threshold(x: jax.Array, m, **kw) -> SelectResult:
 @functools.partial(
     jax.jit,
     static_argnames=("method", "maxit", "cap", "transform", "backend",
-                     "nbins"),
+                     "nbins", "binned_impl"),
 )
 def multi_order_statistic(
     x: jax.Array,
@@ -980,7 +1062,8 @@ def multi_order_statistic(
     cap: Optional[int] = None,
     transform: Optional[str] = None,
     backend: Optional[str] = None,
-    nbins: int = DEF_NBINS,
+    nbins: Optional[int] = None,
+    binned_impl: Optional[str] = None,
 ) -> SelectResult:
     """Several order statistics of the SAME array at once (shared-x mode).
 
@@ -995,6 +1078,8 @@ def multi_order_statistic(
     x = x.reshape(-1)
     n = x.size
     method = _resolve_method(method, n, backend)
+    nbins = _resolve_nbins(nbins, backend, x.dtype)
+    binned_impl = _check_binned_impl(binned_impl)
     ks = jnp.clip(jnp.asarray(ks, jnp.int32).reshape(-1), 1, n)
     nk = ks.shape[0]
     if cap is None:
@@ -1015,7 +1100,8 @@ def multi_order_statistic(
     if transform == "log1p":
         xt, _ = transforms.log1p_transform(x)
         s, _, _ = _run_bracket_phase(
-            SharedEvaluator(xt, ks, backend=backend), method, maxit, cap,
+            SharedEvaluator(xt, ks, backend=backend,
+                            binned_impl=binned_impl), method, maxit, cap,
             nbins)
         s = _map_bracket_back_shared(x, xt, s)
         bcast = lambda v: jnp.broadcast_to(v, (nk,))
@@ -1024,7 +1110,7 @@ def multi_order_statistic(
     elif transform is not None:
         raise ValueError(f"unknown transform {transform!r}")
 
-    ev = SharedEvaluator(x, ks, backend=backend)
+    ev = SharedEvaluator(x, ks, backend=backend, binned_impl=binned_impl)
     s, xmin, xmax = _run_bracket_phase(ev, method, maxit, cap, nbins)
     return _finalize_shared(x, ks, s, cap, xmin, xmax)
 
@@ -1066,7 +1152,8 @@ def _weighted_sort_cumsum(xs, cumw, wkk):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("method", "maxit", "cap", "backend", "nbins"),
+    static_argnames=("method", "maxit", "cap", "backend", "nbins",
+                     "binned_impl"),
 )
 def weighted_select_rows(
     x: jax.Array,
@@ -1077,7 +1164,8 @@ def weighted_select_rows(
     maxit: int = 64,
     cap: Optional[int] = None,
     backend: Optional[str] = None,
-    nbins: int = DEF_NBINS,
+    nbins: Optional[int] = None,
+    binned_impl: Optional[str] = None,
 ) -> SelectResult:
     """Rows-mode weighted selection: ``x``/``w`` (B, n), ``wk`` scalar or
     (B,) target cumulative weights.
@@ -1095,10 +1183,15 @@ def weighted_select_rows(
     b, n = x.shape
     w = jnp.broadcast_to(jnp.asarray(w), x.shape)
     method = _resolve_method(method, n, backend)
+    # either-operand f64 triggers the jnp reroute, so promote for nbins
+    nbins = _resolve_nbins(nbins, backend,
+                           jnp.promote_types(x.dtype, w.dtype))
+    binned_impl = _check_binned_impl(binned_impl)
     if cap is None:
         cap = _default_cap_rows(n)
     cap = min(cap, n)
-    ev = RowsEvaluator(x, wk, backend=backend, weights=w)
+    ev = RowsEvaluator(x, wk, backend=backend, weights=w,
+                       binned_impl=binned_impl)
     wkk = ev.k  # clipped target masses, accumulation dtype, (B,)
 
     if method == "sort":
@@ -1128,7 +1221,8 @@ def weighted_order_statistic(
     maxit: int = 64,
     cap: Optional[int] = None,
     backend: Optional[str] = None,
-    nbins: int = DEF_NBINS,
+    nbins: Optional[int] = None,
+    binned_impl: Optional[str] = None,
 ) -> SelectResult:
     """Smallest element of ``x`` whose cumulative weight reaches ``wk``.
 
@@ -1142,6 +1236,7 @@ def weighted_order_statistic(
         x[None, :], jnp.asarray(w).reshape(1, -1),
         jnp.asarray(wk).reshape(1),
         method=method, maxit=maxit, cap=cap, backend=backend, nbins=nbins,
+        binned_impl=binned_impl,
     )
     return jax.tree.map(lambda a: a[0], res)
 
@@ -1169,7 +1264,8 @@ def weighted_quantile(x: jax.Array, w: jax.Array, q, **kw) -> SelectResult:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("method", "maxit", "cap", "backend", "nbins"),
+    static_argnames=("method", "maxit", "cap", "backend", "nbins",
+                     "binned_impl"),
 )
 def weighted_multi_order_statistic(
     x: jax.Array,
@@ -1180,7 +1276,8 @@ def weighted_multi_order_statistic(
     maxit: int = 64,
     cap: Optional[int] = None,
     backend: Optional[str] = None,
-    nbins: int = DEF_NBINS,
+    nbins: Optional[int] = None,
+    binned_impl: Optional[str] = None,
 ) -> SelectResult:
     """Several weighted order statistics of the SAME array at once.
 
@@ -1192,10 +1289,15 @@ def weighted_multi_order_statistic(
     n = x.size
     w = jnp.broadcast_to(jnp.asarray(w).reshape(-1), x.shape)
     method = _resolve_method(method, n, backend)
+    # either-operand f64 triggers the jnp reroute, so promote for nbins
+    nbins = _resolve_nbins(nbins, backend,
+                           jnp.promote_types(x.dtype, w.dtype))
+    binned_impl = _check_binned_impl(binned_impl)
     if cap is None:
         cap = _default_cap_rows(n)
     cap = min(cap, n)
-    ev = SharedEvaluator(x, wks, backend=backend, weights=w)
+    ev = SharedEvaluator(x, wks, backend=backend, weights=w,
+                         binned_impl=binned_impl)
     wkk = ev.k
     nk = wkk.shape[0]
 

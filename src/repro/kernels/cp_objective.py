@@ -102,8 +102,10 @@ def _fg_tile(x, valid, y, w=None):
                  jnp.sum(jnp.where(valid & (d < 0), -w * d, zero)),
                  jnp.sum(jnp.where(valid & (d < 0), w, zero)),
                  jnp.sum(jnp.where(valid & (d <= 0), w, zero)))
-    cnts = (jnp.sum(jnp.where(valid & (d < 0), 1, 0).astype(jnp.int32)),
-            jnp.sum(jnp.where(valid & (d <= 0), 1, 0).astype(jnp.int32)))
+    # dtype pinned: under global x64 an unpinned int sum accumulates int64,
+    # which the int32 output refs reject (and the engine carries int32)
+    cnts = (jnp.sum(valid & (d < 0), dtype=jnp.int32),
+            jnp.sum(valid & (d <= 0), dtype=jnp.int32))
     return fsums, cnts
 
 
@@ -124,7 +126,7 @@ def _bin_tile(x, valid, lower, upper, w=None):
     # first slot escapes the strict lower test (keeps sum(cnt) == n and
     # parity with the searchsorted oracle)
     m = valid[:, :, None] & ((x3 > lo3) | (j == 0)) & (x3 <= up3)
-    cnt = jnp.sum(m.astype(jnp.int32), axis=(0, 1))
+    cnt = jnp.sum(m, axis=(0, 1), dtype=jnp.int32)
     if w is None:
         return (cnt, jnp.sum(jnp.where(m, x3, jnp.float32(0.0)),
                              axis=(0, 1)))
@@ -252,7 +254,7 @@ def _fg_call_multi(x, w, y, *, block_rows, interpret):
         interpret=interpret,
     )(y, *data)
     s = jnp.sum(fsum, axis=0)
-    c = jnp.sum(cnt, axis=0)
+    c = jnp.sum(cnt, axis=0, dtype=jnp.int32)  # int32 under global x64 too
     return tuple(s[:, i] for i in range(nf)) + (c[:, 0], c[:, 1])
 
 
@@ -285,7 +287,7 @@ def _fg_call_batched(x, w, y, *, block_rows, interpret):
         interpret=interpret,
     )(y, *data)
     s = jnp.sum(fsum, axis=1)
-    c = jnp.sum(cnt, axis=1)
+    c = jnp.sum(cnt, axis=1, dtype=jnp.int32)  # int32 under global x64 too
     return tuple(s[..., i] for i in range(nf)) + (c[..., 0], c[..., 1])
 
 
@@ -330,7 +332,7 @@ def _hist_call_multi(x, w, edges, *, block_rows, interpret):
         out_shape=_hist_out(nout, (nblocks, npiv), nbins + 2),
         interpret=interpret,
     )(y, *data)
-    return tuple(jnp.sum(o, axis=0) for o in outs)
+    return tuple(jnp.sum(o, axis=0, dtype=o.dtype) for o in outs)
 
 
 def _hist_call_batched(x, w, edges, *, block_rows, interpret):
@@ -359,7 +361,7 @@ def _hist_call_batched(x, w, edges, *, block_rows, interpret):
         out_shape=_hist_out(nout, (bsz, nblocks), nbins + 2),
         interpret=interpret,
     )(y, *data)
-    return tuple(jnp.sum(o, axis=1) for o in outs)
+    return tuple(jnp.sum(o, axis=1, dtype=o.dtype) for o in outs)
 
 
 # ---------------------------------------------------------------------------

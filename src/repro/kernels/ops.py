@@ -40,6 +40,27 @@ def _resolve_backend(backend: str | None, x: jax.Array) -> str:
     return backend
 
 
+def _resolve_impl(impl: str | None) -> str:
+    """jnp-path slotting implementation for the histogram dispatchers.
+
+    ``None`` resolves to ``'arithmetic'`` — the verified multiply/floor/clip
+    slotting (bit-identical to the searchsorted oracle by construction, see
+    ``ref.bin_slots``) whose factored one-hot reduction is what makes the
+    CPU histogram pass competitive with a fused FG pass.  ``'searchsorted'``
+    stays selectable for differential testing.  The Pallas kernels bin
+    in-register against the resident edges (neither slotting applies), so
+    ``impl`` only routes the jnp-oracle path — including the f64 reroute.
+    """
+    if impl is None:
+        return "arithmetic"
+    from repro.kernels.ref import BIN_IMPLS
+
+    if impl not in BIN_IMPLS:
+        raise ValueError(f"unknown binning impl {impl!r}; one of "
+                         f"{BIN_IMPLS}")
+    return impl
+
+
 def fused_partials(x, y, *, backend: str | None = None):
     """(sum_pos, sum_neg, n_lt, n_le) for pivot y — kernel-accelerated."""
     backend = _resolve_backend(backend, x)
@@ -131,21 +152,30 @@ def fused_weighted_partials_multi(x, w, y, *, backend: str | None = None):
     raise ValueError(f"unknown backend {backend!r}")
 
 
-def fused_weighted_histogram(x, w, edges, *, backend: str | None = None):
+def fused_weighted_histogram(x, w, edges, *, backend: str | None = None,
+                             impl: str | None = None,
+                             want_sums: bool = True):
     """Weighted binned pass: ``(cnt, wcnt, wsum)`` per bracket sub-interval
-    (slot weight mass next to the count — the weighted narrowing signal)."""
+    (slot weight mass next to the count — the weighted narrowing signal).
+
+    ``impl`` selects the jnp-path slotting (see :func:`_resolve_impl`);
+    ``want_sums=False`` skips the per-slot ``sum(w*x)`` on the arithmetic
+    path (only the polish reads it) — the kernels always emit it."""
     backend = _resolve_backend_weighted(backend, x, w)
     if backend == "pallas":
         return cp_objective.wcp_histogram(x, w, edges)
     if backend == "pallas_interpret":
         return cp_objective.wcp_histogram(x, w, edges, interpret=True)
     if backend == "jnp":
-        return ref.wcp_histogram_ref(x, w, edges)
+        return ref.wcp_histogram_ref(x, w, edges, impl=_resolve_impl(impl),
+                                     want_sums=want_sums)
     raise ValueError(f"unknown backend {backend!r}")
 
 
 def fused_weighted_histogram_batched(x, w, edges, *,
-                                     backend: str | None = None):
+                                     backend: str | None = None,
+                                     impl: str | None = None,
+                                     want_sums: bool = True):
     """Row-wise weighted binned pass: ``x``/``w`` (B, n), per-row edges
     ``(B, nbins+1)``."""
     backend = _resolve_backend_weighted(backend, x, w)
@@ -155,12 +185,16 @@ def fused_weighted_histogram_batched(x, w, edges, *,
         return cp_objective.wcp_histogram_batched(x, w, edges,
                                                   interpret=True)
     if backend == "jnp":
-        return ref.wcp_histogram_batched_ref(x, w, edges)
+        return ref.wcp_histogram_batched_ref(x, w, edges,
+                                             impl=_resolve_impl(impl),
+                                             want_sums=want_sums)
     raise ValueError(f"unknown backend {backend!r}")
 
 
 def fused_weighted_histogram_multi(x, w, edges, *,
-                                   backend: str | None = None):
+                                   backend: str | None = None,
+                                   impl: str | None = None,
+                                   want_sums: bool = True):
     """Shared-x weighted multi-bracket binned pass: ``x``/``w`` (n,),
     per-pivot edges ``(K, nbins+1)``."""
     backend = _resolve_backend_weighted(backend, x, w)
@@ -169,19 +203,26 @@ def fused_weighted_histogram_multi(x, w, edges, *,
     if backend == "pallas_interpret":
         return cp_objective.wcp_histogram_multi(x, w, edges, interpret=True)
     if backend == "jnp":
-        return ref.wcp_histogram_multi_ref(x, w, edges)
+        return ref.wcp_histogram_multi_ref(x, w, edges,
+                                           impl=_resolve_impl(impl),
+                                           want_sums=want_sums)
     raise ValueError(f"unknown backend {backend!r}")
 
 
-def fused_histogram(x, edges, *, backend: str | None = None):
+def fused_histogram(x, edges, *, backend: str | None = None,
+                    impl: str | None = None, want_sums: bool = True):
     """Binned data pass: (count, sum) per bracket sub-interval.
 
     ``x`` (n,), realized bracket edges ``(nbins+1,)`` built ONCE by the
     caller via ``kernels.ref.bin_edges`` (the exactness contract: every
     consumer compares against the same edge array, nobody recomputes edge
-    arithmetic).  Returns ``(cnt, bsum)`` of shape ``(nbins + 2,)`` (slot
-    layout in ``kernels.ref.cp_histogram_ref``).  One sweep buys
-    log2(nbins) bisection-equivalents of bracket narrowing.
+    arithmetic — the arithmetic slotting's candidate is verified against
+    that same array, see ``ref.bin_slots``).  Returns ``(cnt, bsum)`` of
+    shape ``(nbins + 2,)`` (slot layout in
+    ``kernels.ref.searchsorted_slots``).  One sweep buys log2(nbins)
+    bisection-equivalents of bracket narrowing.  ``want_sums=False`` skips
+    ``bsum`` (returns ``None``) on the arithmetic jnp path — plain binned
+    sweeps never read it, only the polish does.
     """
     backend = _resolve_backend(backend, x)
     if backend == "pallas":
@@ -189,11 +230,14 @@ def fused_histogram(x, edges, *, backend: str | None = None):
     if backend == "pallas_interpret":
         return cp_objective.cp_histogram(x, edges, interpret=True)
     if backend == "jnp":
-        return ref.cp_histogram_ref(x, edges)
+        return ref.cp_histogram_ref(x, edges, impl=_resolve_impl(impl),
+                                    want_sums=want_sums)
     raise ValueError(f"unknown backend {backend!r}")
 
 
-def fused_histogram_batched(x, edges, *, backend: str | None = None):
+def fused_histogram_batched(x, edges, *, backend: str | None = None,
+                            impl: str | None = None,
+                            want_sums: bool = True):
     """Row-wise binned pass: ``x`` (B, n), per-row edges ``(B, nbins+1)``."""
     backend = _resolve_backend(backend, x)
     if backend == "pallas":
@@ -201,11 +245,14 @@ def fused_histogram_batched(x, edges, *, backend: str | None = None):
     if backend == "pallas_interpret":
         return cp_objective.cp_histogram_batched(x, edges, interpret=True)
     if backend == "jnp":
-        return ref.cp_histogram_batched_ref(x, edges)
+        return ref.cp_histogram_batched_ref(x, edges,
+                                            impl=_resolve_impl(impl),
+                                            want_sums=want_sums)
     raise ValueError(f"unknown backend {backend!r}")
 
 
-def fused_histogram_multi(x, edges, *, backend: str | None = None):
+def fused_histogram_multi(x, edges, *, backend: str | None = None,
+                          impl: str | None = None, want_sums: bool = True):
     """Shared-x multi-bracket binned pass: ``x`` (n,), per-pivot edges
     ``(K, nbins+1)``.
 
@@ -218,5 +265,7 @@ def fused_histogram_multi(x, edges, *, backend: str | None = None):
     if backend == "pallas_interpret":
         return cp_objective.cp_histogram_multi(x, edges, interpret=True)
     if backend == "jnp":
-        return ref.cp_histogram_multi_ref(x, edges)
+        return ref.cp_histogram_multi_ref(x, edges,
+                                          impl=_resolve_impl(impl),
+                                          want_sums=want_sums)
     raise ValueError(f"unknown backend {backend!r}")

@@ -1,0 +1,39 @@
+"""Shared XLA_FLAGS handling for the multi-device subprocess tests.
+
+The workers force a host-device count via
+``--xla_force_host_platform_device_count``; both the parent test (building
+the subprocess env) and the workers themselves (prepending their own count)
+must drop ONLY a stale device-count flag and preserve every other caller
+flag.  Keep this the single implementation — it is imported by the test
+modules and by the workers (before jax is imported; this module must stay
+jax-free).
+"""
+import os
+
+
+def strip_device_count(flags: str) -> list[str]:
+    """Drop any ``--xla_force_host_platform_device_count`` flag, keep the
+    rest (order preserved)."""
+    return [f for f in flags.split()
+            if not f.startswith("--xla_force_host_platform_device_count")]
+
+
+def subprocess_env(root: str) -> dict:
+    """Env for a worker subprocess: PYTHONPATH to ``src``, XLA_FLAGS
+    preserved minus a stale device-count (the worker prepends its own)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    flags = strip_device_count(env.get("XLA_FLAGS", ""))
+    if flags:
+        env["XLA_FLAGS"] = " ".join(flags)
+    else:
+        env.pop("XLA_FLAGS", None)
+    return env
+
+
+def force_device_count(n_dev: int) -> None:
+    """Worker-side: set XLA_FLAGS to force ``n_dev`` host devices while
+    preserving the caller's other flags.  Call BEFORE importing jax."""
+    os.environ["XLA_FLAGS"] = " ".join(
+        [f"--xla_force_host_platform_device_count={n_dev}"]
+        + strip_device_count(os.environ.get("XLA_FLAGS", "")))

@@ -1,0 +1,145 @@
+"""Subprocess worker for the polish-driven distributed-round tests.
+
+Run as:  python tests/_dist_polish_worker.py <n_devices>
+Sets XLA_FLAGS *before* importing jax (preserving caller flags other than a
+stale device-count), then checks on an n = 1M array, both measures:
+
+* exactness of ``method='binned_polish'`` vs np.partition / the weighted
+  sorted-cumsum oracle AND vs the local engine;
+* the round-count claim: 1 psum round where plain binned takes >= 2;
+* garbage-cut injection: a sabotaged centroid cut costs extra rounds but
+  NEVER exactness (the fp contract: the cut steers edge placement only,
+  narrowing stays on psum'd measured prefixes).
+
+Exits nonzero on failure.
+"""
+import sys
+
+from _dist_env import force_device_count
+
+n_dev = int(sys.argv[1]) if len(sys.argv) > 1 else 4
+force_device_count(n_dev)  # must run BEFORE the jax import below
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import _compat, distributed, selection  # noqa: E402
+
+assert jax.device_count() == n_dev, jax.devices()
+
+
+def check(cond, msg):
+    if not cond:
+        print("FAIL:", msg)
+        sys.exit(1)
+
+
+def main():
+    mesh = _compat.make_mesh((n_dev,), ("data",))
+    rng = np.random.default_rng(0)
+    n = 1 << 20
+    x = rng.standard_normal(n).astype(np.float32)
+    xj = jnp.asarray(x)
+    k = (n + 1) // 2
+    want = np.partition(x, k - 1)[k - 1]
+
+    # --- counting measure: exactness + the 2 -> 1 psum-round claim -------
+    res_b = distributed.sharded_order_statistic(xj, k, mesh, P("data"),
+                                                method="binned")
+    res_p = distributed.sharded_order_statistic(xj, k, mesh, P("data"),
+                                                method="binned_polish")
+    loc = selection.order_statistic(xj, k, method="binned")
+    check(np.float32(res_b.value) == want, f"binned {res_b.value} != {want}")
+    check(np.float32(res_p.value) == want, f"polish {res_p.value} != {want}")
+    check(np.float32(loc.value) == want, "local engine disagrees")
+    check(int(res_p.iters) == 1,
+          f"polish rounds at 1M: {int(res_p.iters)} != 1")
+    check(int(res_b.iters) >= 2,
+          f"plain binned unexpectedly took {int(res_b.iters)} round(s)")
+
+    # off-median ranks stay exact under the polish
+    for kq in [1, n // 10, n - 7]:
+        r = distributed.sharded_order_statistic(xj, kq, mesh, P("data"),
+                                                method="binned_polish")
+        check(np.float32(r.value) == np.partition(x, kq - 1)[kq - 1],
+              f"polish k={kq} mismatch")
+
+    # --- weighted measure ------------------------------------------------
+    w = rng.integers(0, 5, n).astype(np.float32)
+    w[0] = 1.0
+    o = np.argsort(x, kind="stable")
+    cumw = np.cumsum(w[o].astype(np.float64))
+    wk = float(np.float32(0.5 * w.sum()))
+    wwant = x[o][min(np.searchsorted(cumw, wk, "left"), n - 1)]
+    wres_b = distributed.sharded_weighted_order_statistic(
+        xj, jnp.asarray(w), wk, mesh, P("data"), method="binned")
+    wres_p = distributed.sharded_weighted_order_statistic(
+        xj, jnp.asarray(w), wk, mesh, P("data"), method="binned_polish")
+    check(np.float32(wres_b.value) == wwant,
+          f"weighted binned {wres_b.value} != {wwant}")
+    check(np.float32(wres_p.value) == wwant,
+          f"weighted polish {wres_p.value} != {wwant}")
+    check(int(wres_p.iters) == 1,
+          f"weighted polish rounds at 1M: {int(wres_p.iters)} != 1")
+    check(int(wres_b.iters) >= 2,
+          f"weighted binned unexpectedly took {int(wres_b.iters)}")
+
+    # --- garbage-cut injection: a bad centroid costs rounds, never
+    # exactness (cut steers edge PLACEMENT only) -------------------------
+    orig = selection.polish_edges
+
+    def garbage_cut(lo, hi, t, nbins):
+        # a finite but maximally-unhelpful cut: pinned at the bracket's
+        # right end regardless of the psum'd centroid
+        bad = lo + jnp.asarray(0.99, lo.dtype) * (hi - lo)
+        return orig(lo, hi, bad, nbins)
+
+    selection.polish_edges = garbage_cut
+    try:
+        res_g = distributed.sharded_order_statistic(
+            xj, k, mesh, P("data"), method="binned_polish")
+        wres_g = distributed.sharded_weighted_order_statistic(
+            xj, jnp.asarray(w), wk, mesh, P("data"), method="binned_polish")
+    finally:
+        selection.polish_edges = orig
+    check(np.float32(res_g.value) == want,
+          f"garbage cut broke exactness: {res_g.value} != {want}")
+    check(np.float32(wres_g.value) == wwant,
+          f"garbage cut broke weighted exactness: {wres_g.value}")
+    check(int(res_g.iters) > int(res_p.iters),
+          f"garbage cut should cost rounds: {int(res_g.iters)} vs "
+          f"{int(res_p.iters)}")
+    check(int(res_g.iters) <= int(res_b.iters) + 2,
+          f"garbage cut cost too many rounds: {int(res_g.iters)}")
+
+    # NaN cut: polish_edges degrades it to the bracket midpoint internally
+    def nan_cut(lo, hi, t, nbins):
+        return orig(lo, hi, jnp.full_like(t, jnp.nan), nbins)
+
+    selection.polish_edges = nan_cut
+    try:
+        res_n = distributed.sharded_order_statistic(
+            xj, k, mesh, P("data"), method="binned_polish")
+    finally:
+        selection.polish_edges = orig
+    check(np.float32(res_n.value) == want,
+          f"NaN cut broke exactness: {res_n.value} != {want}")
+
+    # --- method='auto' mirrors the local engine (static by global n) -----
+    res_a = distributed.sharded_order_statistic(xj, k, mesh, P("data"),
+                                                method="auto")
+    check(np.float32(res_a.value) == want, "auto mismatch")
+    small = rng.standard_normal(1 << 12).astype(np.float32)
+    ks = 1 << 11
+    res_s = distributed.sharded_order_statistic(
+        jnp.asarray(small), ks, mesh, P("data"), method="auto")
+    check(np.float32(res_s.value) == np.partition(small, ks - 1)[ks - 1],
+          "small auto (cp leg) mismatch")
+
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

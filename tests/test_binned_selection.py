@@ -189,14 +189,35 @@ def test_binned_iters_are_per_row():
 
 
 def test_method_resolution_is_backend_aware():
-    """None/'auto' picks binned only on the kernel path; explicit wins."""
+    """None/'auto' picks binned for large n on EVERY backend (the verified
+    arithmetic pass made the CPU sweep competitive — the acceptance flip);
+    explicit wins; nbins stays backend-tuned."""
     big = selection.BINNED_MIN_N
     assert selection._resolve_method(None, big, "pallas") == "binned"
     assert selection._resolve_method("auto", big, "pallas") == "binned"
     assert selection._resolve_method(None, big - 1, "pallas") == "cp"
-    # this container is CPU: default backend is the jnp oracle -> cp
-    assert selection._resolve_method(None, big, None) == "cp"
+    # the jnp path now flips to binned too (ROADMAP open item closed: the
+    # CPU histogram pass is no longer scatter/searchsorted-bound)
+    assert selection._resolve_method(None, big, None) == "binned"
+    assert selection._resolve_method(None, 1 << 20, "jnp") == "binned"
+    assert selection._resolve_method(None, big - 1, None) == "cp"
     assert selection._resolve_method("binned", 10, None) == "binned"
+    # sweep width: wide on the kernel path, narrow on the jnp path (the
+    # factored reduction's cost scales with the slot count)
+    assert selection._resolve_nbins(None, "pallas") == selection.DEF_NBINS
+    assert selection._resolve_nbins(None, "jnp") == selection.DEF_NBINS_JNP
+    assert selection._resolve_nbins(None, None) in (
+        selection.DEF_NBINS, selection.DEF_NBINS_JNP)  # TPU-dependent
+    assert selection._resolve_nbins(64, "pallas") == 64
+    # f64 data is rerouted off the kernels by ops, so its sweeps get the
+    # jnp-tuned width even when the kernel path was requested ...
+    assert selection._resolve_nbins(None, "pallas", jnp.float64) == \
+        selection.DEF_NBINS_JNP
+    assert selection._resolve_nbins(None, "pallas", jnp.float32) == \
+        selection.DEF_NBINS
+    # ... except pallas_interpret, which is deliberately not rerouted
+    assert selection._resolve_nbins(None, "pallas_interpret",
+                                    jnp.float64) == selection.DEF_NBINS
     with pytest.raises(ValueError):
         selection._resolve_method("nope", big, None)
 

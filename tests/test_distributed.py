@@ -47,9 +47,11 @@ def test_across_axis_single_device():
 
 @pytest.mark.parametrize("n_dev", [4, 8])
 def test_multi_device_subprocess(n_dev):
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    env.pop("XLA_FLAGS", None)
+    from _dist_env import subprocess_env
+
+    # drops only a stale device-count flag (the worker prepends its own);
+    # popping XLA_FLAGS wholesale would clobber unrelated caller flags
+    env = subprocess_env(ROOT)
     out = subprocess.run(
         [sys.executable, os.path.join(ROOT, "tests", "_dist_worker.py"),
          str(n_dev)],

@@ -1,0 +1,106 @@
+"""Polish-driven distributed rounds: differential + round-count tests.
+
+The multi-device leg runs in a subprocess (``--xla_force_host_platform_
+device_count``, patterned on ``_dist_worker.py``) so this pytest process
+keeps its single CPU device; the worker asserts, at n = 1M and for BOTH
+measures, that ``method='binned_polish'`` matches np.partition / the
+weighted sorted-cumsum oracle AND the local engine, that it needs exactly
+1 psum round where plain binned needs >= 2, and that an injected garbage
+centroid cut costs rounds but never exactness.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import _compat, distributed
+
+jax.config.update("jax_platform_name", "cpu")
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _subprocess_env():
+    """Worker env: PYTHONPATH to src, XLA_FLAGS preserved except any stale
+    device-count flag (the worker prepends its own)."""
+    from _dist_env import subprocess_env
+
+    return subprocess_env(ROOT)
+
+
+def test_single_device_polish_path():
+    """1-device mesh sanity for both measures (API + exactness; the round
+    economics need real sharding and live in the subprocess worker)."""
+    mesh = _compat.make_mesh((1,), ("data",))
+    rng = np.random.default_rng(3)
+    n = 1 << 17
+    x = rng.standard_normal(n).astype(np.float32)
+    k = n // 3
+    res = distributed.sharded_order_statistic(
+        jnp.asarray(x), k, mesh, P("data"), method="binned_polish")
+    assert np.float32(res.value) == np.partition(x, k - 1)[k - 1]
+    # auto resolves statically by the global element count (binned here)
+    res_a = distributed.sharded_order_statistic(
+        jnp.asarray(x), k, mesh, P("data"), method="auto")
+    assert np.float32(res_a.value) == np.partition(x, k - 1)[k - 1]
+    # and to the cp rounds below BINNED_MIN_N
+    small = rng.standard_normal(1 << 10).astype(np.float32)
+    res_s = distributed.sharded_order_statistic(
+        jnp.asarray(small), 1 << 9, mesh, P("data"), method="auto")
+    assert np.float32(res_s.value) == \
+        np.partition(small, (1 << 9) - 1)[(1 << 9) - 1]
+    w = rng.integers(1, 4, n).astype(np.float32)
+    o = np.argsort(x, kind="stable")
+    cumw = np.cumsum(w[o].astype(np.float64))
+    wk = float(np.float32(0.5 * w.sum()))
+    wres = distributed.sharded_weighted_order_statistic(
+        jnp.asarray(x), jnp.asarray(w), wk, mesh, P("data"),
+        method="binned_polish")
+    assert np.float32(wres.value) == \
+        x[o][min(np.searchsorted(cumw, wk, "left"), n - 1)]
+
+
+def test_local_weighted_wrapper_validates_method():
+    mesh = _compat.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError):
+        distributed.sharded_weighted_order_statistic(
+            jnp.zeros((16,), jnp.float32), jnp.ones((16,), jnp.float32),
+            4.0, mesh, P("data"), method="florble")
+
+
+def test_weighted_cp_rounds_and_auto_small_n():
+    """The weighted leg supports the cp rounds too (six-partial psums) —
+    'auto' resolves there below BINNED_MIN_N, so pin its exactness."""
+    mesh = _compat.make_mesh((1,), ("data",))
+    rng = np.random.default_rng(9)
+    n = 1 << 12
+    x = rng.standard_normal(n).astype(np.float32)
+    w = rng.integers(1, 4, n).astype(np.float32)
+    o = np.argsort(x, kind="stable")
+    cumw = np.cumsum(w[o].astype(np.float64))
+    wk = float(np.float32(0.5 * w.sum()))
+    want = x[o][min(np.searchsorted(cumw, wk, "left"), n - 1)]
+    for method in ["cp", "auto"]:
+        res = distributed.sharded_weighted_order_statistic(
+            jnp.asarray(x), jnp.asarray(w), wk, mesh, P("data"),
+            method=method, cap_local=256)
+        assert np.float32(res.value) == want, method
+
+
+@pytest.mark.parametrize("n_dev", [4])
+def test_multi_device_polish_subprocess(n_dev):
+    env = _subprocess_env()
+    out = subprocess.run(
+        [sys.executable,
+         os.path.join(ROOT, "tests", "_dist_polish_worker.py"), str(n_dev)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert out.returncode == 0, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "OK" in out.stdout

@@ -271,6 +271,87 @@ def test_weighted_multi_order_statistic_bit_exact(ints, scale_exp, data):
         np.testing.assert_array_equal(np.asarray(res.value), want)
 
 
+# ---------------------------------------------------------------------------
+# polish_edges: direct property coverage (previously only end-to-end)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    a=st.integers(-(2**20), 2**20),
+    b=st.integers(-(2**20), 2**20),
+    scale_exp=scale_exps,
+    degen=st.sampled_from(["none", "collapsed", "ulp", "inf_adjacent"]),
+    tkind=st.sampled_from(["inside", "below", "above", "nan", "inf"]),
+    tq=st.integers(min_value=0, max_value=1000),
+    nbins=st.sampled_from([2, 3, 4, 8, 128]),
+)
+def test_polish_edges_contract(a, b, scale_exp, degen, tkind, tq, nbins):
+    """The realized-edge contract of ``polish_edges``, pinned directly:
+    monotone-sorted output of ``nbins + 1`` values, ``e_0 == lo`` and
+    ``e_nbins == hi`` EXACTLY, every value a realized fp number inside
+    ``[lo, hi]`` — under degenerate brackets (lo == hi, ulp-wide,
+    ±inf-adjacent) and degenerate cuts (outside the bracket, NaN, inf),
+    which the engine feeds it whenever a bin's centroid is garbage."""
+    lo, hi = np.sort(to_f32([min(a, b), max(a, b)], scale_exp))
+    if degen == "collapsed":
+        hi = lo
+    elif degen == "ulp":
+        hi = np.nextafter(lo, np.float32(np.inf))
+    elif degen == "inf_adjacent":
+        lo = np.float32(-3.4e38)
+        hi = np.float32(3.4e38)
+    if tkind == "inside":
+        t = np.float32(lo + (np.float64(hi) - np.float64(lo)) * tq / 1000.0)
+    elif tkind == "below":
+        # f64 intermediate: the f32 cast may overflow to -inf, which is a
+        # legitimate garbage-cut input the clamp must absorb
+        with np.errstate(over="ignore"):
+            t = np.float32(np.float64(lo) - abs(np.float64(lo)) - 1.0)
+    elif tkind == "above":
+        with np.errstate(over="ignore"):
+            t = np.float32(np.float64(hi) + abs(np.float64(hi)) + 1.0)
+    elif tkind == "nan":
+        t = np.float32(np.nan)
+    else:
+        t = np.float32(np.inf)
+    ej = selection.polish_edges(
+        jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(t), nbins)
+    e = np.asarray(ej)
+    assert e.shape == (nbins + 1,)
+    assert np.all(np.isfinite(e)), e
+    # monotone under the PLATFORM's comparison semantics (the ones the
+    # histogram pass and descent step actually use): on FTZ hardware
+    # denormal-scale edges compare DAZ-equal, which numpy would misread
+    assert bool(jnp.all(ej[1:] >= ej[:-1])), "edges must be monotone-sorted"
+    # exact endpoint anchoring: the descent step and the finalize compare
+    # against e_0/e_nbins as the bracket itself
+    assert e[0] == lo and e[-1] == hi, (e[0], e[-1], lo, hi)
+    assert bool(jnp.all(ej >= lo)) and bool(jnp.all(ej <= hi))
+    # realized values: the array IS the fp truth (f32 round-trip identity)
+    np.testing.assert_array_equal(e, e.astype(np.float32))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    ints=ints_small,
+    scale_exp=scale_exps,
+    kf=st.integers(min_value=0, max_value=1000),
+    impl=st.sampled_from(["searchsorted", "arithmetic"]),
+)
+def test_binned_polish_bit_exact_both_impls(ints, scale_exp, kf, impl):
+    """binned_polish rides hypothesis data through both slotting impls —
+    the polish must stay np.partition-exact whatever edges it places."""
+    x = to_f32(ints, scale_exp)
+    n = x.size
+    k = max(1, min(n, 1 + (kf * n) // 1001))
+    expected = np.partition(x, k - 1)[k - 1]
+    res = selection.order_statistic(jnp.asarray(x), k,
+                                    method="binned_polish",
+                                    binned_impl=impl, maxit=256, cap=8)
+    np.testing.assert_equal(np.float32(res.value), expected)
+
+
 @settings(max_examples=20, deadline=None)
 @given(
     ints=st.lists(st.integers(-(2**20), 2**20), min_size=1, max_size=200),
