@@ -29,6 +29,11 @@ Three tentpole claims ride this bench:
   (subprocess, forced host devices) tracks the psum-round counts:
   polish-driven rounds solve the 1M median in 1 round vs binned's 2, both
   measures.
+* PR 6 (one-sweep multi-k): the ``multi_k`` record times a K-vector of
+  quantiles of ONE array (K in {4, 16, 64} at n = 1M) against the K = 1
+  binned median — every data pass is shared across the K ladders, so the
+  sweep count stays ~flat in K (<= 2x the single-median sweeps at K = 16)
+  where naive per-k dispatch would pay ~K x the HBM traffic.
 
 Emits the usual CSV rows plus one ``BENCH_JSON`` line; ``run(json_path=...)``
 (the ``benchmarks/run.py --json`` path) additionally writes the records to a
@@ -113,6 +118,54 @@ def _hist_pass_record(rows):
                  f"cp={t_ecp * 1e6:.0f}us sweep/pass="
                  f"{per_sweep / per_pass:.2f}x"))
     return rec
+
+
+def _multi_k_record(rows, full: bool = False):
+    """One-sweep multi-k economics (PR 6): a K-vector of quantiles on ONE
+    array shares every histogram sweep, so the sweep count stays ~flat in K
+    (vs the naive K independent descents paying ~K x the HBM traffic).
+    Records K in {4, 16, 64} at n = 1M against the K = 1 binned median
+    baseline: total sweeps, us per call, and us per k."""
+    n = 1 << 20
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal(n).astype(np.float32)
+    xj = jnp.asarray(x)
+    k_med = (n + 1) // 2
+
+    base = jax.jit(lambda v: selection.multi_order_statistic(
+        v, jnp.asarray([k_med], jnp.int32), method="binned",
+        backend="jnp").value)
+    want_med = np.partition(x, k_med - 1)[k_med - 1]
+    assert np.float32(np.asarray(base(xj))[0]) == want_med
+    t_base = timeit(base, xj, reps=3)
+    sweeps_base = int(jnp.max(selection.multi_order_statistic(
+        xj, jnp.asarray([k_med], jnp.int32), method="binned",
+        backend="jnp").iters))
+
+    recs = []
+    for kk in [4, 16, 64]:
+        qs = [(i + 1) / (kk + 1) for i in range(kk)]
+        ks = np.asarray([int(np.ceil(q * n)) for q in qs], np.int32)
+        want = np.partition(x, ks - 1)[ks - 1]
+        fn = jax.jit(lambda v, kv=jnp.asarray(ks): selection
+                     .multi_order_statistic(v, kv, method="binned",
+                                            backend="jnp").value)
+        got = np.asarray(fn(xj))
+        assert np.array_equal(got, want), ("multi_k", kk)
+        t = timeit(fn, xj, reps=3)
+        sweeps = int(jnp.max(selection.multi_order_statistic(
+            xj, jnp.asarray(ks), method="binned", backend="jnp").iters))
+        recs.append(dict(
+            K=kk, n=n, sweeps=sweeps, sweeps_k1=sweeps_base,
+            us_per_call=t * 1e6, us_per_k=t * 1e6 / kk,
+            us_k1_baseline=t_base * 1e6,
+            sweep_ratio_vs_k1=sweeps / max(sweeps_base, 1),
+            time_ratio_vs_k1=t / t_base,
+        ))
+        rows.append((f"multi_k_binned/K={kk}/n={n}", t * 1e6,
+                     f"sweeps={sweeps} (K=1: {sweeps_base}) "
+                     f"{t * 1e6 / kk:.0f}us/k"))
+    return recs
 
 
 def _distributed_rounds_record(rows, n_dev=4, log2_n=20):
@@ -275,15 +328,17 @@ def run(full: bool = False, json_path: str | None = None):
             / times["weighted_binned"],
         ))
 
-    # ---- histogram-pass microbench + distributed round counts ------------
+    # ---- multi-k sweep sharing + histogram-pass microbench + distributed
+    # round counts ---------------------------------------------------------
+    multi_k_recs = _multi_k_record(rows, full=full)
     hist_rec = _hist_pass_record(rows)
     dist_rec = _distributed_rounds_record(rows)
 
     emit(rows)
     payload = {"bench": "batched_selection", "exact": True,
                "backend": jax.default_backend(), "grid": records,
-               "weighted_grid": wrecords, "hist_pass": hist_rec,
-               "distributed": dist_rec}
+               "weighted_grid": wrecords, "multi_k": multi_k_recs,
+               "hist_pass": hist_rec, "distributed": dist_rec}
     print("BENCH_JSON " + json.dumps(payload))
     if json_path is not None:
         with open(json_path, "w") as f:

@@ -529,9 +529,224 @@ def sharded_weighted_median(x, w, mesh, in_spec, **kw):
 
 
 def sharded_quantile(x, q, mesh, in_spec, **kw):
-    n = x.size
-    k = jnp.clip(jnp.ceil(jnp.asarray(q) * n).astype(jnp.int32), 1, n)
-    return sharded_order_statistic(x, k, mesh, in_spec, **kw)
+    # ranks resolve host-side at f64 (the traced f32 product mis-lands
+    # high quantiles at n ~ 2^25 — see selection.ranks_from_quantiles)
+    return sharded_order_statistic(
+        x, selection.ranks_from_quantiles(q, x.size), mesh, in_spec, **kw)
+
+
+def multi_order_statistic_across_shards(
+    x_local: jax.Array,
+    ks,
+    axes: AxisNames,
+    *,
+    maxit: int = 64,
+    cap_local: int = 4096,
+    backend: Optional[str] = None,
+    method: str = "binned",
+    nbins: int = selection.DEF_NBINS,
+    weights: Optional[jax.Array] = None,
+    binned_impl: Optional[str] = None,
+) -> selection.SelectResult:
+    """K order statistics of the *global* sharded array in ONE round loop;
+    call inside shard_map.  Returns a replicated ``(K,)`` SelectResult.
+
+    The K brackets narrow simultaneously: each binned round is one LOCAL
+    shared-x multi-bracket histogram pass (``fused_histogram_multi`` — the
+    x tile is read once for all K edge ladders) plus ONE psum of the
+    ``(K, nbins + 2)`` slot matrix, so a sharded decile vector costs the
+    same collective rounds as a sharded median — not ~K× them.  With
+    ``weights`` the targets are cumulative masses and the mass matrix rides
+    the wire next to the count matrix (two ``(K, nbins+2)`` psums — the
+    counts feed the cap rule); ``method='binned_polish'`` psums the
+    per-slot sum matrix too and steers each k's next edge ladder from its
+    own straddling-bin centroid.  ``method='cp'`` psums the stacked
+    ``(K,)`` additive partials per round; ``'auto'`` resolves by the global
+    element count exactly like :func:`local_order_statistic`.
+
+    The loop IS the local engine's (``selection.binned_loop_batched`` /
+    ``bracket_loop_batched``) over an :class:`FnEvaluator` whose closures
+    psum the local multi-bracket passes — the stopping rule compares the
+    GLOBAL in-bracket counts against ``cap_local``, which conservatively
+    bounds every shard's compaction buffer.  The finalize compacts per
+    shard per k (``selection.rank_compact``), all_gathers the tiny
+    ``(cap_local,)`` buffers and resolves through the engine's one answer
+    cascade (``selection._assemble_answers``).
+    """
+    from repro.kernels import ops as kops  # deferred: core <-> kernels
+
+    x_local = x_local.reshape(-1)
+    axes_t = _axes_tuple(axes)
+    n_glob = jax.lax.psum(x_local.size, axes_t)  # constant-folds (static)
+    if method == "auto":
+        method = ("binned" if n_glob >= selection.BINNED_MIN_N else "cp")
+    weighted = weights is not None
+    dtype = x_local.dtype
+    bigloc = jnp.asarray(jnp.inf, dtype)
+
+    if weighted:
+        wl = jnp.asarray(weights).reshape(-1)
+        from repro.kernels.ref import _waccum_dtype
+        mdt = _waccum_dtype(x_local, wl)
+        W = _psum(jnp.sum(wl, dtype=mdt), axes_t)
+        kk = jnp.minimum(jnp.asarray(ks, mdt).reshape(-1), W)
+        wl = wl.astype(mdt)
+
+        def partials(y):
+            wsp, wsn, wlt, wle, lt, le = kops.fused_weighted_partials_multi(
+                x_local, wl, y, backend=backend)
+            f = _psum(jnp.stack([wsp, wsn, wlt, wle]), axes_t)
+            c = _psum(jnp.stack([lt, le]), axes_t)
+            return f[0], f[1], f[2], f[3], c[0], c[1]
+
+        def histogram(edges, need_msum=False):
+            cnt, wcnt, wsum = kops.fused_weighted_histogram_multi(
+                x_local, wl, edges, backend=backend, impl=binned_impl,
+                want_sums=need_msum)
+            # count matrix rides a pmax: its prefix differences then bound
+            # the WORST shard's in-bracket count (sum of per-slot maxima >=
+            # max of per-shard sums), so the engine's cap rule sizes the
+            # per-shard compaction buffers — mirroring local_order_statistic
+            return (_pmax(cnt, axes_t), _psum(wcnt, axes_t),
+                    _psum(wsum, axes_t) if need_msum else None)
+    else:
+        wl = None
+        W = None
+        kk = jnp.clip(jnp.asarray(ks, jnp.int32).reshape(-1), 1, n_glob)
+
+        def partials(y):
+            sp, sn, lt, le = kops.fused_partials_multi(x_local, y,
+                                                       backend=backend)
+            f = _psum(jnp.stack([sp, sn]), axes_t)
+            c = _psum(jnp.stack([lt, le]), axes_t)
+            return f[0], f[1], c[0], c[1]
+
+        def histogram(edges, need_msum=False):
+            # ONE psum of the (K, nbins + 2) slot matrix per round drives
+            # the narrowing; the count matrix additionally rides a pmax —
+            # its prefix differences bound the WORST shard's in-bracket
+            # count (sum of per-slot maxima >= max of per-shard sums), so
+            # the engine's cap rule sizes the per-shard compaction buffers
+            # exactly like local_order_statistic's max_in bookkeeping
+            cnt, bsum = kops.fused_histogram_multi(
+                x_local, edges, backend=backend, impl=binned_impl,
+                want_sums=need_msum)
+            return (_pmax(cnt, axes_t), _psum(cnt, axes_t),
+                    _psum(bsum, axes_t) if need_msum else None)
+
+    nk = kk.shape[0]
+    bc = lambda v: jnp.broadcast_to(v, (nk,))
+
+    def init_stats():
+        gmin = _pmin(jnp.min(x_local), axes_t)
+        gmax = _pmax(jnp.max(x_local), axes_t)
+        if weighted:
+            wx = _psum(jnp.sum(wl * x_local, dtype=mdt), axes_t)
+            mean = (wx / jnp.maximum(W, 1e-30)).astype(dtype)
+        else:
+            mean = (_psum(jnp.sum(x_local, dtype=dtype), axes_t)
+                    / jnp.asarray(n_glob, dtype))
+        return bc(gmin), bc(gmax), bc(mean)
+
+    ev = FnEvaluator(partials, jnp.asarray(n_glob, jnp.int32), kk,
+                     init_stats, histogram=histogram,
+                     weights_total=W if weighted else None)
+    s, xmin, xmax = selection._run_bracket_phase(ev, method, maxit,
+                                                 cap_local, nbins)
+
+    # ---- distributed finalize: compact per shard per k, gather, assemble
+    cols = [(x_local, bigloc)]
+    if weighted:
+        cols.append((wl, jnp.zeros((), wl.dtype)))
+
+    def one(args):
+        lo, hi = args
+        mask_in = (x_local > lo) & (x_local <= hi)
+        bufs, loc_in = selection.rank_compact(mask_in, cap_local, cols)
+        gathered = []
+        for b in bufs:
+            for ax in axes_t:
+                b = jax.lax.all_gather(b, ax)
+            gathered.append(b.reshape(-1))
+        ok = _pmax(loc_in, axes_t) <= cap_local
+        n_in = _psum(loc_in, axes_t)
+        vnext = _pmin(jnp.min(jnp.where(x_local > lo, x_local, bigloc)),
+                      axes_t)
+        if weighted:
+            cLm = _psum(jnp.sum(jnp.where(x_local <= lo, wl, 0),
+                                dtype=mdt), axes_t)
+            m_le_v = _psum(jnp.sum(jnp.where(x_local <= vnext, wl, 0),
+                                   dtype=mdt), axes_t)
+        else:
+            cLm = _psum(jnp.sum(x_local <= lo, dtype=jnp.int32), axes_t)
+            m_le_v = _psum(jnp.sum(x_local <= vnext, dtype=jnp.int32),
+                           axes_t)
+        return (*gathered, cLm, n_in, ok, vnext, m_le_v)
+
+    out = jax.lax.map(one, (s.yL, s.yR))
+    if weighted:
+        z, zw, cLm, n_in, ok, vnext, m_le_v = out
+        order = jnp.argsort(z, axis=-1)
+        zs = jnp.take_along_axis(z, order, axis=-1)
+        zws = jnp.take_along_axis(zw, order, axis=-1)
+        m_lt_max = bc(_psum(jnp.sum(
+            jnp.where(x_local < jnp.max(xmax), wl, 0), dtype=mdt), axes_t))
+    else:
+        z, cLm, n_in, ok, vnext, m_le_v = out
+        zs = jnp.sort(z, axis=-1)
+        zws = None
+        m_lt_max = bc(_psum(jnp.sum(x_local < jnp.max(xmax),
+                                    dtype=jnp.int32), axes_t))
+    gcap = zs.shape[-1]
+    # a per-shard buffer overflow must fail the sort path even when the
+    # GLOBAL count fits the gathered width (survivors were dropped locally)
+    n_in_eff = jnp.where(ok, n_in, gcap + 1)
+    res = selection._assemble_answers(kk, s, gcap, zs, zws, cLm, n_in_eff,
+                                      vnext, m_le_v, m_lt_max, xmin, xmax)
+    return res._replace(n_in=n_in)
+
+
+def sharded_multi_order_statistic(
+    x: jax.Array,
+    ks,
+    mesh: jax.sharding.Mesh,
+    in_spec: P,
+    **kwargs,
+) -> selection.SelectResult:
+    """User-facing wrapper: shard_map the multi-k distributed selection.
+
+    ``in_spec`` is the PartitionSpec of ``x`` (1-D); ``ks`` the (K,) target
+    ranks (or masses via ``weights=`` in ``kwargs``, sharded like ``x``).
+    The ``(K,)`` result is fully replicated.
+    """
+    axes = tuple(
+        a for ax in in_spec for a in
+        ((ax,) if isinstance(ax, str) else tuple(ax or ()))
+    )
+    weights = kwargs.pop("weights", None)
+    in_specs = (in_spec,) if weights is None else (in_spec, in_spec)
+
+    @functools.partial(
+        _compat.shard_map, mesh=mesh, in_specs=in_specs,
+        out_specs=jax.tree.map(lambda _: P(), selection.SelectResult(
+            *(0,) * 6)),
+        # outputs are semantically replicated (built from psum/all_gather
+        # results), but the static varying-axis analysis cannot prove it
+        check=False,
+    )
+    def run(x_local, *w_local):
+        return multi_order_statistic_across_shards(
+            x_local, ks, axes,
+            weights=w_local[0] if w_local else None, **kwargs)
+
+    return run(x) if weights is None else run(x, weights)
+
+
+def sharded_quantiles(x, qs, mesh, in_spec, **kw):
+    """Lower empirical quantiles of the sharded array (one multi-k solve:
+    a decile vector costs the same psum rounds as a sharded median)."""
+    return sharded_multi_order_statistic(
+        x, selection.ranks_from_quantiles(qs, x.size), mesh, in_spec, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -567,7 +782,7 @@ def axis_evaluator(v_local: jax.Array, k, axes: AxisNames) -> FnEvaluator:
                 _psum((d < 0).astype(jnp.int32), axes_t),
                 _psum((d <= 0).astype(jnp.int32), axes_t))
 
-    def histogram(edges):                              # (S..., nbins + 1)
+    def histogram(edges, need_msum=False):             # (S..., nbins + 1)
         cap = jnp.full_like(edges[..., :1], jnp.inf)
         lower = jnp.concatenate([-cap, edges], axis=-1)
         upper = jnp.concatenate([edges, cap], axis=-1)

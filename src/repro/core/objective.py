@@ -509,10 +509,11 @@ class FnEvaluator:
 
     ``histogram(edges) -> (cnt, mass, msum)`` (edges ``(B, nbins + 1)``,
     outputs ``(B, nbins + 2)``; ``msum`` may be ``None``) is optional;
-    without it the evaluator only drives the FG methods.  The closure takes
-    only ``edges`` — the engine's ``need_msum`` hint is absorbed here (a
-    closure that can skip sum transport may simply always return ``None``
-    for ``msum`` and forgo the polish).
+    without it the evaluator only drives the FG methods.  A closure may
+    accept a ``need_msum`` keyword to see the engine's demand hint (skip
+    sum transport on plain rounds, ship it on polish rounds); a
+    single-argument closure absorbs the hint here (always returning
+    ``None`` for ``msum`` forgoes the polish).
 
     Weighted leg: with ``weights_total=W`` the ``partials`` closure must
     return the six weighted partials, ``k`` is the target mass ``wk``, and
@@ -522,11 +523,20 @@ class FnEvaluator:
     def __init__(self, partials: Callable, n, k, init_stats: Callable,
                  histogram: Optional[Callable] = None,
                  weights_total=None):
+        import inspect
+
         self._partials = partials
         self.n = n
         self.k = k
         self._init_stats = init_stats
         self._histogram = histogram
+        self._hist_takes_msum = False
+        if histogram is not None:
+            try:
+                params = inspect.signature(histogram).parameters
+                self._hist_takes_msum = "need_msum" in params
+            except (TypeError, ValueError):  # builtins / odd callables
+                self._hist_takes_msum = False
         self.weighted = weights_total is not None
         self.W = weights_total
 
@@ -540,6 +550,8 @@ class FnEvaluator:
             raise NotImplementedError(
                 "this FnEvaluator was built without a histogram closure; "
                 "method='binned' needs one")
+        if self._hist_takes_msum:
+            return self._histogram(edges, need_msum=need_msum)
         return self._histogram(edges)
 
     def init_stats(self):

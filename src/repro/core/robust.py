@@ -516,8 +516,46 @@ def pytree_quantile(tree, q, *, maxit: int = 16, abs_values: bool = True):
     return jnp.where(s["exact"], s["t"], 0.5 * (s["yL"] + s["yR"]))
 
 
+def pytree_quantile_per_leaf(tree, q, *, abs_values: bool = True,
+                             method: Optional[str] = None,
+                             maxit: int = 64):
+    """EXACT per-leaf q-quantiles of a pytree in ONE segmented solve.
+
+    Flattens the tree to one concatenated array with a leaf-id segment
+    vector (leaf boundaries are static, so the per-leaf target ranks
+    resolve host-side at f64) and runs a single
+    ``selection.segmented_order_statistic`` — every engine data pass is
+    shared by all leaves, so K per-layer thresholds cost the passes of one
+    scalar quantile, not K of them.  Returns a pytree with the same
+    structure holding one scalar threshold per leaf.
+
+    Unlike :func:`pytree_quantile` (which never reshapes its leaves, so
+    sharded gradients stay sharded), the concatenation materializes the
+    flattened |tree| once — the per-leaf regime is the single-device /
+    replicated-clip path; see ``benchmarks/clip_bench.py`` for the
+    head-to-head.
+    """
+    leaves = list(jax.tree.leaves(tree))
+    if not leaves:
+        return tree
+    sizes = [int(l.size) for l in leaves]
+
+    def absf(l):
+        l = l.astype(jnp.float32)
+        return jnp.abs(l) if abs_values else l
+
+    x = jnp.concatenate([absf(l).reshape(-1) for l in leaves])
+    seg = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                           for i, s in enumerate(sizes)])
+    res = selection.segmented_quantiles(x, seg, q, sizes, method=method,
+                                        maxit=maxit)
+    return jax.tree.unflatten(jax.tree.structure(tree),
+                              [res.value[i] for i in range(len(sizes))])
+
+
 def hist_quantile(tree, q, *, bins: int = 512, abs_values: bool = True):
-    """Two-pass histogram quantile over a pytree (|x| by default).
+    """Two-pass histogram quantile over a pytree (|x| by default) —
+    APPROXIMATE, by bin resolution.
 
     Pass 1: min/max; pass 2: one 512-bin histogram (log-spaced) built with
     scatter-adds; the quantile is read from the cumulative histogram.  Bin
@@ -525,6 +563,13 @@ def hist_quantile(tree, q, *, bins: int = 512, abs_values: bool = True):
     the CP solver's ~maxit sweeps.  The histogram is additive across shards
     (one psum of 512 floats under GSPMD), preserving the paper's
     scalar-ish-communication property.
+
+    For EXACT thresholds at a comparable pass count, use the engine's
+    binned descent instead: :func:`pytree_quantile` (global, ~maxit CP
+    passes), or :func:`pytree_quantile_per_leaf` / the underlying
+    ``selection.segmented_quantiles`` (exact per-leaf thresholds, 2-3
+    histogram sweeps + an O(cap) finalize) — measured head-to-head in
+    ``benchmarks/clip_bench.py``.
     """
     leaves = list(jax.tree.leaves(tree))
     n = sum(l.size for l in leaves)
@@ -553,12 +598,26 @@ def hist_quantile(tree, q, *, bins: int = 512, abs_values: bool = True):
 
 
 def clip_by_quantile(tree, q: float = 0.99, *, maxit: int = 16,
-                     min_scale: float = 1e-8):
-    """Clip gradient magnitudes at their global q-quantile (paper-primitive
+                     min_scale: float = 1e-8, per_leaf: bool = False):
+    """Clip gradient magnitudes at their q-quantile (paper-primitive
     alternative to global-norm clipping; robust to exploding coordinates).
 
-    Returns (clipped_tree, threshold).
+    ``per_leaf=False`` (default): ONE global threshold from
+    :func:`pytree_quantile`; returns ``(clipped_tree, threshold)``.
+
+    ``per_leaf=True``: per-LAYER thresholds — every leaf is clipped at its
+    own exact q-quantile, all resolved by one segmented multi-k solve
+    (:func:`pytree_quantile_per_leaf`: the engine's data passes are shared
+    across leaves, so K thresholds cost the passes of one).  Returns
+    ``(clipped_tree, thresholds_tree)`` with one scalar per leaf.
     """
+    if per_leaf:
+        thrs = pytree_quantile_per_leaf(tree, q)
+        thrs = jax.tree.map(lambda t: jnp.maximum(t, min_scale), thrs)
+        clipped = jax.tree.map(
+            lambda g, t: jnp.clip(g, -t.astype(g.dtype), t.astype(g.dtype)),
+            tree, thrs)
+        return clipped, thrs
     thr = pytree_quantile(tree, q, maxit=maxit)
     thr = jnp.maximum(thr, min_scale)
     clipped = jax.tree.map(

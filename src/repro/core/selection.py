@@ -112,6 +112,7 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.objective import (
     FG,
@@ -1035,11 +1036,29 @@ def median(x: jax.Array, **kw) -> SelectResult:
     return order_statistic(x, (n + 1) // 2, **kw)
 
 
+def ranks_from_quantiles(qs, n: int):
+    """Target ranks ``ceil(q * n)`` clipped to ``[1, n]``, resolved in f64
+    BEFORE tracing whenever ``qs`` is concrete.
+
+    Under default x64-off the traced product rounds ``q`` and ``q * n``
+    through f32, whose spacing at ``n ~ 2^25`` is 4 ulps of an integer —
+    a high quantile (q = 0.999999) can land on the wrong rank entirely.
+    Concrete ``qs`` (the overwhelmingly common call) are resolved host-side
+    in numpy f64, where every rank below 2^53 is exact; traced ``qs`` fall
+    back to the on-device product (exact whenever ``q * n`` is
+    f32-representable).
+    """
+    if isinstance(qs, jax.core.Tracer):
+        return jnp.clip(jnp.ceil(jnp.asarray(qs) * n).astype(jnp.int32),
+                        1, n)
+    qv = np.asarray(qs, np.float64)
+    return jnp.asarray(np.clip(np.ceil(qv * float(n)), 1, n)
+                       .astype(np.int32))
+
+
 def quantile(x: jax.Array, q, **kw) -> SelectResult:
     """Lower empirical q-quantile: x_(ceil(q*n)) clipped to [1, n]."""
-    n = x.size
-    k = jnp.clip(jnp.ceil(jnp.asarray(q) * n).astype(jnp.int32), 1, n)
-    return order_statistic(x, k, **kw)
+    return order_statistic(x, ranks_from_quantiles(q, x.size), **kw)
 
 
 def topk_threshold(x: jax.Array, m, **kw) -> SelectResult:
@@ -1116,10 +1135,161 @@ def multi_order_statistic(
 
 
 def quantiles(x: jax.Array, qs, **kw) -> SelectResult:
-    """Lower empirical quantiles at each q in ``qs`` (one shared-x solve)."""
+    """Lower empirical quantiles at each q in ``qs`` (one shared-x solve).
+
+    With ``method='binned'``/``'binned_polish'`` the K brackets narrow
+    simultaneously from ONE histogram sweep per round (the shared-x
+    multi-bracket pass), so a decile vector costs the data traffic of a
+    single binned median, not ~K× it.
+    """
+    return multi_order_statistic(x, ranks_from_quantiles(qs, x.size), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Segmented selection: per-segment order statistics of ONE concatenated
+# array — the per-leaf regime (gradient-clip thresholds over a pytree)
+# ---------------------------------------------------------------------------
+
+
+def _finalize_segmented(x, seg, kk, s: BatchState, cap, xmin,
+                        xmax) -> SelectResult:
+    """Per-segment exact finalize: :func:`_finalize_shared` with every
+    reduction masked to its own segment.  Sequential ``lax.map`` over the K
+    segments keeps peak memory O(n + K*cap) — no ``(K, n)`` broadcast."""
+    x = x.reshape(-1)
+    big = jnp.asarray(jnp.inf, x.dtype)
+    sids = jnp.arange(kk.shape[0], dtype=jnp.int32)
+
+    def one(args):
+        sid, lo, hi, xm = args
+        inseg = seg == sid
+        mask_in = inseg & (x > lo) & (x <= hi)
+        cL = jnp.sum(inseg & (x <= lo), dtype=jnp.int32)
+        vnext = jnp.min(jnp.where(inseg & (x > lo), x, big))
+        (z,), n_in = rank_compact(mask_in, cap, [(x, big)])
+        m_le_v = jnp.sum(inseg & (x <= vnext), dtype=jnp.int32)
+        m_lt_max = jnp.sum(inseg & (x < xm), dtype=jnp.int32)
+        return z, cL, n_in, vnext, m_le_v, m_lt_max
+
+    z, cLm, n_in, vnext, m_le_v, m_lt_max = jax.lax.map(
+        one, (sids, s.yL, s.yR, xmax))
+    zs = jnp.sort(z, axis=-1)
+    return _assemble_answers(kk, s, cap, zs, None, cLm, n_in, vnext,
+                             m_le_v, m_lt_max, xmin, xmax)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("nsegs", "method", "maxit", "cap", "nbins"),
+)
+def segmented_order_statistic(
+    x: jax.Array,
+    seg: jax.Array,
+    ks,
+    *,
+    nsegs: int,
+    method: Optional[str] = None,
+    maxit: int = 64,
+    cap: Optional[int] = None,
+    nbins: Optional[int] = None,
+) -> SelectResult:
+    """Per-segment order statistics of one concatenated array.
+
+    ``x`` (n,) holds K segments' data interleaved/concatenated, ``seg``
+    (n,) int32 gives each element's segment id in ``[0, nsegs)``, and
+    ``ks`` (nsegs,) the 1-indexed target rank WITHIN each segment (clipped
+    to the segment size).  Every segment must be non-empty.  Returns a
+    :class:`SelectResult` with (nsegs,) fields — segment ``i`` solves the
+    independent problem ``x[seg == i], ks[i]`` with the engine's full
+    exactness guarantees.
+
+    This is the per-leaf regime: per-layer gradient-clip thresholds solve
+    ONE of these over the flattened pytree instead of one scalar selection
+    per leaf.  All data passes are shared: the FG pass is a handful of
+    ``segment_sum`` reductions, and the binned pass buys every segment a
+    factor-``nbins`` narrowing from one chunked sweep
+    (``kernels.ref.segmented_histogram_ref`` — per-element binary search
+    into its own segment's realized edge ladder, no ``(K, n)``
+    intermediate).  ``method``/``maxit``/``cap``/``nbins`` as in
+    :func:`multi_order_statistic`; the segmented data pass is jnp-only
+    (XLA fuses it), so there is no ``backend`` knob.
+    """
+    from repro.kernels import ref as kref  # deferred: core <-> kernels
+
+    x = x.reshape(-1)
     n = x.size
-    ks = jnp.clip(jnp.ceil(jnp.asarray(qs) * n).astype(jnp.int32), 1, n)
-    return multi_order_statistic(x, ks, **kw)
+    seg = jnp.asarray(seg, jnp.int32).reshape(-1)
+    method = _resolve_method(method, n, None)
+    nbins = _resolve_nbins(nbins, None, x.dtype)
+    if cap is None:
+        cap = _default_cap_rows(n)
+    cap = min(cap, n)
+    ones = jnp.ones(n, jnp.int32)
+    counts = jax.ops.segment_sum(ones, seg, num_segments=nsegs)
+    kk = jnp.clip(jnp.asarray(ks, jnp.int32).reshape(-1), 1,
+                  jnp.maximum(counts, 1))
+
+    if method == "sort":
+        # per-segment rank via one global sort on (seg, x) lexicographic
+        order = jnp.lexsort((x, seg))
+        xs = x[order]
+        starts = jnp.cumsum(counts) - counts
+        value = xs[jnp.clip(starts + kk - 1, 0, n - 1)]
+        zero = jnp.zeros((nsegs,), jnp.int32)
+        xmin = jax.ops.segment_min(x, seg, num_segments=nsegs)
+        xmax = jax.ops.segment_max(x, seg, num_segments=nsegs)
+        return SelectResult(
+            value=value, iters=zero,
+            status=jnp.full((nsegs,), EXACT_HIT, jnp.int32),
+            y_lo=xmin, y_hi=xmax,
+            n_in=counts,
+        )
+
+    def partials(y):
+        d = x - y[seg]
+        ssum = lambda v: jax.ops.segment_sum(v, seg, num_segments=nsegs)
+        return (ssum(jnp.maximum(d, 0)), ssum(jnp.maximum(-d, 0)),
+                ssum((d < 0).astype(jnp.int32)),
+                ssum((d <= 0).astype(jnp.int32)))
+
+    def init_stats():
+        xmin = jax.ops.segment_min(x, seg, num_segments=nsegs)
+        xmax = jax.ops.segment_max(x, seg, num_segments=nsegs)
+        mean = jax.ops.segment_sum(x, seg, num_segments=nsegs) \
+            / jnp.maximum(counts, 1).astype(x.dtype)
+        return xmin, xmax, mean.astype(x.dtype)
+
+    def histogram(edges, need_msum=False):
+        out = kref.segmented_histogram_ref(
+            x, seg, edges, rows=(x,) if need_msum else ())
+        cnt = out[0]
+        return cnt, cnt, (out[1] if need_msum else None)
+
+    from repro.core.objective import FnEvaluator
+
+    ev = FnEvaluator(partials, counts, kk, init_stats, histogram=histogram)
+    s, xmin, xmax = _run_bracket_phase(ev, method, maxit, cap, nbins)
+    return _finalize_segmented(x, seg, kk, s, cap, xmin, xmax)
+
+
+def segmented_quantiles(x: jax.Array, seg: jax.Array, q, sizes,
+                        **kw) -> SelectResult:
+    """Per-segment lower q-quantile from STATIC segment sizes.
+
+    ``sizes`` (a python sequence — the leaf sizes are static in the
+    per-leaf regime) turns ``q`` into per-segment ranks host-side at f64
+    (:func:`ranks_from_quantiles` per segment), then runs ONE
+    :func:`segmented_order_statistic` solve.  ``q`` may be a scalar (same
+    quantile every segment, the clip-threshold case) or a length-``nsegs``
+    sequence.
+    """
+    sizes = [int(v) for v in np.asarray(sizes).reshape(-1)]
+    qv = np.broadcast_to(np.asarray(q, np.float64).reshape(-1),
+                         (len(sizes),))
+    ks = np.asarray([int(np.clip(np.ceil(qi * ni), 1, max(ni, 1)))
+                     for qi, ni in zip(qv, sizes)], np.int32)
+    return segmented_order_statistic(x, seg, jnp.asarray(ks),
+                                     nsegs=len(sizes), **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -1322,9 +1492,20 @@ def weighted_multi_order_statistic(
 
 
 def weighted_quantiles(x: jax.Array, w: jax.Array, qs, **kw) -> SelectResult:
-    """Lower weighted quantiles at each q in ``qs`` (one shared-x solve)."""
+    """Lower weighted quantiles at each q in ``qs`` (one shared-x solve).
+
+    The target masses ``q * W`` are formed at f64 host-side whenever both
+    ``qs`` and the measured total mass are concrete (a single rounding into
+    the accumulation dtype instead of the double-rounded f32 product —
+    same rationale as :func:`ranks_from_quantiles`); traced operands fall
+    back to the on-device product.
+    """
     x = jnp.asarray(x).reshape(-1)
     w = jnp.asarray(w).reshape(-1)
     W = _total_mass(x, w)
-    wks = jnp.asarray(qs, W.dtype).reshape(-1) * W
+    if isinstance(W, jax.core.Tracer) or isinstance(qs, jax.core.Tracer):
+        wks = jnp.asarray(qs, W.dtype).reshape(-1) * W
+    else:
+        wks = jnp.asarray(
+            np.asarray(qs, np.float64).reshape(-1) * float(W), W.dtype)
     return weighted_multi_order_statistic(x, w, wks, **kw)

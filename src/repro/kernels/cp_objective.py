@@ -109,13 +109,18 @@ def _fg_tile(x, valid, y, w=None):
     return fsums, cnts
 
 
-def _bin_tile(x, valid, lower, upper, w=None):
+def _bin_tile(x, valid, lower, upper, w=None, want_sums=True):
     """Per-tile slot partials for one bracket's ``(nbins + 2,)`` bounds.
 
     Counting leg: ``(cnt, bsum)``; weights leg: ``(cnt, wcnt, wsum)`` —
     per-slot element count, weight mass and ``sum(w*x)``.  The one-hot
     membership intermediate is ``(block_rows, LANES, nbins + 2)`` — callers
     bound ``block_rows`` accordingly (DEF_HIST_BLOCK_ROWS).
+
+    ``want_sums=False`` (static) drops the trailing per-slot sum — only
+    the in-bin polish reads ``bsum``/``wsum``; plain binned sweeps skip
+    that accumulator and its HBM writeback entirely (the weighted mass
+    vector ``wcnt`` always rides: it IS the weighted narrowing signal).
     """
     nslots = lower.shape[-1]
     j = jax.lax.broadcasted_iota(jnp.int32, (1, 1, nslots), 2)
@@ -128,10 +133,14 @@ def _bin_tile(x, valid, lower, upper, w=None):
     m = valid[:, :, None] & ((x3 > lo3) | (j == 0)) & (x3 <= up3)
     cnt = jnp.sum(m, axis=(0, 1), dtype=jnp.int32)
     if w is None:
+        if not want_sums:
+            return (cnt,)
         return (cnt, jnp.sum(jnp.where(m, x3, jnp.float32(0.0)),
                              axis=(0, 1)))
     w3 = w[:, :, None]
     wcnt = jnp.sum(jnp.where(m, w3, jnp.float32(0.0)), axis=(0, 1))
+    if not want_sums:
+        return (cnt, wcnt)
     wsum = jnp.sum(jnp.where(m, w3 * x3, jnp.float32(0.0)), axis=(0, 1))
     return (cnt, wcnt, wsum)
 
@@ -185,7 +194,8 @@ def _fg_kernel_batched(y_ref, *refs, n, block_rows, weighted):
         cnt_ref[0, 0, i] = v
 
 
-def _hist_kernel_multi(y_ref, *refs, n, npiv, block_rows, weighted):
+def _hist_kernel_multi(y_ref, *refs, n, npiv, block_rows, weighted,
+                       want_sums):
     """One x (or x/w) tile, ALL K brackets: like :func:`_fg_kernel_multi`,
     the tile is resident once and every live bracket's histogram is
     computed from it (K static, bracket loop unrolls at trace time)."""
@@ -198,12 +208,13 @@ def _hist_kernel_multi(y_ref, *refs, n, npiv, block_rows, weighted):
     w = w_ref[...].astype(jnp.float32) if weighted else None
     valid = _valid_mask(b, x.shape, n, block_rows)
     for j in range(npiv):  # static unroll
-        outs = _bin_tile(x, valid, y_ref[0, j], y_ref[1, j], w)
+        outs = _bin_tile(x, valid, y_ref[0, j], y_ref[1, j], w,
+                         want_sums=want_sums)
         for ref, v in zip(out_refs, outs):
             ref[0, j, :] = v
 
 
-def _hist_kernel_batched(y_ref, *refs, n, block_rows, weighted):
+def _hist_kernel_batched(y_ref, *refs, n, block_rows, weighted, want_sums):
     """Row-wise histogram body: grid (B, nblocks), per-row slot bounds."""
     r = pl.program_id(0)  # problem row
     b = pl.program_id(1)  # block within the row
@@ -214,7 +225,8 @@ def _hist_kernel_batched(y_ref, *refs, n, block_rows, weighted):
     x = x_ref[0].astype(jnp.float32)  # (block_rows, LANES)
     w = w_ref[0].astype(jnp.float32) if weighted else None
     valid = _valid_mask(b, x.shape, n, block_rows)
-    outs = _bin_tile(x, valid, y_ref[0, r], y_ref[1, r], w)
+    outs = _bin_tile(x, valid, y_ref[0, r], y_ref[1, r], w,
+                     want_sums=want_sums)
     for ref, v in zip(out_refs, outs):
         ref[0, 0, :] = v
 
@@ -308,8 +320,11 @@ def _hist_out(nout, lead, nslots):
             for i in range(nout)]
 
 
-def _hist_call_multi(x, w, edges, *, block_rows, interpret):
-    """Shared-x multi-bracket histogram launch; per-bracket slot vectors."""
+def _hist_call_multi(x, w, edges, *, block_rows, interpret,
+                     want_sums=True):
+    """Shared-x multi-bracket histogram launch; per-bracket slot vectors.
+    ``want_sums=False`` drops the trailing per-slot sum output (and its
+    accumulator/HBM writeback) — the caller gets ``None`` in its place."""
     weighted = w is not None
     n = x.size
     npiv, nbins = edges.shape[0], edges.shape[-1] - 1
@@ -319,11 +334,12 @@ def _hist_call_multi(x, w, edges, *, block_rows, interpret):
         data.append(_pad_to_tiles(w.reshape(-1), block_rows)[0])
     lower, upper = _slot_bounds(jnp.asarray(edges, jnp.float32))
     y = jnp.stack([lower, upper])  # (2, K, nbins + 2)
-    nout = 3 if weighted else 2
+    nout = (3 if weighted else 2) - (not want_sums)
 
     outs = pl.pallas_call(
         functools.partial(_hist_kernel_multi, n=n, npiv=npiv,
-                          block_rows=block_rows, weighted=weighted),
+                          block_rows=block_rows, weighted=weighted,
+                          want_sums=want_sums),
         grid=(nblocks,),
         in_specs=[pl.BlockSpec(memory_space=pl.ANY)]  # slot bounds: tiny
         + [pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))] * len(data),
@@ -332,10 +348,12 @@ def _hist_call_multi(x, w, edges, *, block_rows, interpret):
         out_shape=_hist_out(nout, (nblocks, npiv), nbins + 2),
         interpret=interpret,
     )(y, *data)
-    return tuple(jnp.sum(o, axis=0, dtype=o.dtype) for o in outs)
+    outs = tuple(jnp.sum(o, axis=0, dtype=o.dtype) for o in outs)
+    return outs if want_sums else outs + (None,)
 
 
-def _hist_call_batched(x, w, edges, *, block_rows, interpret):
+def _hist_call_batched(x, w, edges, *, block_rows, interpret,
+                       want_sums=True):
     """Row-wise histogram launch: per-row slot vectors ``(B, nbins + 2)``."""
     weighted = w is not None
     bsz, n = x.shape
@@ -347,11 +365,11 @@ def _hist_call_batched(x, w, edges, *, block_rows, interpret):
     lower, upper = _slot_bounds(
         jnp.asarray(edges, jnp.float32).reshape(bsz, nbins + 1))
     y = jnp.stack([lower, upper])  # (2, B, nbins + 2)
-    nout = 3 if weighted else 2
+    nout = (3 if weighted else 2) - (not want_sums)
 
     outs = pl.pallas_call(
         functools.partial(_hist_kernel_batched, n=n, block_rows=block_rows,
-                          weighted=weighted),
+                          weighted=weighted, want_sums=want_sums),
         grid=(bsz, nblocks),
         in_specs=[pl.BlockSpec(memory_space=pl.ANY)]
         + [pl.BlockSpec((1, block_rows, LANES),
@@ -361,7 +379,8 @@ def _hist_call_batched(x, w, edges, *, block_rows, interpret):
         out_shape=_hist_out(nout, (bsz, nblocks), nbins + 2),
         interpret=interpret,
     )(y, *data)
-    return tuple(jnp.sum(o, axis=1, dtype=o.dtype) for o in outs)
+    outs = tuple(jnp.sum(o, axis=1, dtype=o.dtype) for o in outs)
+    return outs if want_sums else outs + (None,)
 
 
 # ---------------------------------------------------------------------------
@@ -510,13 +529,15 @@ def wcp_partials_batched(
 # finalize comparisons.
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "interpret", "want_sums"))
 def cp_histogram(
     x: jax.Array,
     edges: jax.Array,
     *,
     block_rows: int = DEF_HIST_BLOCK_ROWS,
     interpret: bool = False,
+    want_sums: bool = True,
 ):
     """Binned data pass: ``x`` (n,), realized bracket edges (nbins+1,)
     (monotone non-decreasing; build them with ``kernels.ref.bin_edges``).
@@ -524,44 +545,53 @@ def cp_histogram(
 
     Returns ``(cnt, bsum)`` of shape ``(nbins + 2,)`` — counts int32
     (bit-identical to ``kernels.ref.cp_histogram_ref``), sums f32.
+    ``want_sums=False`` (static) skips the sum accumulator and its HBM
+    writeback — only the in-bin polish reads ``bsum`` — returning
+    ``(cnt, None)``.
     """
     nbins = edges.shape[-1] - 1
     outs = _hist_call_multi(
         x, None, jnp.asarray(edges, jnp.float32).reshape(1, nbins + 1),
-        block_rows=block_rows, interpret=interpret)
-    return tuple(o[0] for o in outs)
+        block_rows=block_rows, interpret=interpret, want_sums=want_sums)
+    return tuple(o[0] if o is not None else None for o in outs)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "interpret", "want_sums"))
 def cp_histogram_batched(
     x: jax.Array,
     edges: jax.Array,
     *,
     block_rows: int = DEF_HIST_BLOCK_ROWS,
     interpret: bool = False,
+    want_sums: bool = True,
 ):
     """Row-wise binned pass: ``x`` (B, n), per-row realized edges
-    ``(B, nbins+1)``.  Returns ``(cnt, bsum)`` of shape ``(B, nbins + 2)``."""
+    ``(B, nbins+1)``.  Returns ``(cnt, bsum)`` of shape ``(B, nbins + 2)``
+    (``bsum=None`` under ``want_sums=False``)."""
     return _hist_call_batched(x, None, edges, block_rows=block_rows,
-                              interpret=interpret)
+                              interpret=interpret, want_sums=want_sums)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "interpret", "want_sums"))
 def cp_histogram_multi(
     x: jax.Array,
     edges: jax.Array,
     *,
     block_rows: int = DEF_HIST_BLOCK_ROWS,
     interpret: bool = False,
+    want_sums: bool = True,
 ):
     """Shared-x multi-bracket binned pass: ``x`` (n,), per-pivot realized
     edges ``(K, nbins+1)``.  Returns ``(cnt, bsum)`` of shape
-    ``(K, nbins + 2)``."""
+    ``(K, nbins + 2)`` (``bsum=None`` under ``want_sums=False``)."""
     return _hist_call_multi(x, None, edges, block_rows=block_rows,
-                            interpret=interpret)
+                            interpret=interpret, want_sums=want_sums)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "interpret", "want_sums"))
 def wcp_histogram(
     x: jax.Array,
     w: jax.Array,
@@ -569,21 +599,25 @@ def wcp_histogram(
     *,
     block_rows: int = DEF_HIST_BLOCK_ROWS,
     interpret: bool = False,
+    want_sums: bool = True,
 ):
     """Weighted binned pass: ``x``/``w`` (n,), realized edges (nbins+1,).
     The K=1 view of :func:`wcp_histogram_multi`.
 
     Returns ``(cnt, wcnt, wsum)`` of shape ``(nbins + 2,)`` — counts int32
     (bit-identical to ``kernels.ref.wcp_histogram_ref``), masses/sums f32.
+    ``want_sums=False`` skips ``wsum`` (returns ``None``); the mass vector
+    ``wcnt`` always rides (it IS the weighted narrowing signal).
     """
     nbins = edges.shape[-1] - 1
     outs = _hist_call_multi(
         x, w, jnp.asarray(edges, jnp.float32).reshape(1, nbins + 1),
-        block_rows=block_rows, interpret=interpret)
-    return tuple(o[0] for o in outs)
+        block_rows=block_rows, interpret=interpret, want_sums=want_sums)
+    return tuple(o[0] if o is not None else None for o in outs)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "interpret", "want_sums"))
 def wcp_histogram_batched(
     x: jax.Array,
     w: jax.Array,
@@ -591,15 +625,17 @@ def wcp_histogram_batched(
     *,
     block_rows: int = DEF_HIST_BLOCK_ROWS,
     interpret: bool = False,
+    want_sums: bool = True,
 ):
     """Row-wise weighted binned pass: ``x``/``w`` (B, n), per-row edges
     ``(B, nbins+1)``.  Returns ``(cnt, wcnt, wsum)``, each
-    ``(B, nbins + 2)``."""
+    ``(B, nbins + 2)`` (``wsum=None`` under ``want_sums=False``)."""
     return _hist_call_batched(x, w, edges, block_rows=block_rows,
-                              interpret=interpret)
+                              interpret=interpret, want_sums=want_sums)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "interpret", "want_sums"))
 def wcp_histogram_multi(
     x: jax.Array,
     w: jax.Array,
@@ -607,9 +643,11 @@ def wcp_histogram_multi(
     *,
     block_rows: int = DEF_HIST_BLOCK_ROWS,
     interpret: bool = False,
+    want_sums: bool = True,
 ):
     """Shared-x weighted multi-bracket binned pass: ``x``/``w`` (n,),
     per-pivot realized edges ``(K, nbins+1)``.  Returns ``(cnt, wcnt,
-    wsum)``, each ``(K, nbins + 2)``."""
+    wsum)``, each ``(K, nbins + 2)`` (``wsum=None`` under
+    ``want_sums=False``)."""
     return _hist_call_multi(x, w, edges, block_rows=block_rows,
-                            interpret=interpret)
+                            interpret=interpret, want_sums=want_sums)

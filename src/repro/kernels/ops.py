@@ -159,13 +159,15 @@ def fused_weighted_histogram(x, w, edges, *, backend: str | None = None,
     (slot weight mass next to the count — the weighted narrowing signal).
 
     ``impl`` selects the jnp-path slotting (see :func:`_resolve_impl`);
-    ``want_sums=False`` skips the per-slot ``sum(w*x)`` on the arithmetic
-    path (only the polish reads it) — the kernels always emit it."""
+    ``want_sums=False`` skips the per-slot ``sum(w*x)`` on every backend
+    (only the polish reads it) — the kernels drop the accumulator and its
+    HBM writeback, the jnp arithmetic path the extra value row."""
     backend = _resolve_backend_weighted(backend, x, w)
     if backend == "pallas":
-        return cp_objective.wcp_histogram(x, w, edges)
+        return cp_objective.wcp_histogram(x, w, edges, want_sums=want_sums)
     if backend == "pallas_interpret":
-        return cp_objective.wcp_histogram(x, w, edges, interpret=True)
+        return cp_objective.wcp_histogram(x, w, edges, interpret=True,
+                                          want_sums=want_sums)
     if backend == "jnp":
         return ref.wcp_histogram_ref(x, w, edges, impl=_resolve_impl(impl),
                                      want_sums=want_sums)
@@ -180,10 +182,12 @@ def fused_weighted_histogram_batched(x, w, edges, *,
     ``(B, nbins+1)``."""
     backend = _resolve_backend_weighted(backend, x, w)
     if backend == "pallas":
-        return cp_objective.wcp_histogram_batched(x, w, edges)
+        return cp_objective.wcp_histogram_batched(x, w, edges,
+                                                   want_sums=want_sums)
     if backend == "pallas_interpret":
         return cp_objective.wcp_histogram_batched(x, w, edges,
-                                                  interpret=True)
+                                                   interpret=True,
+                                                   want_sums=want_sums)
     if backend == "jnp":
         return ref.wcp_histogram_batched_ref(x, w, edges,
                                              impl=_resolve_impl(impl),
@@ -199,9 +203,11 @@ def fused_weighted_histogram_multi(x, w, edges, *,
     per-pivot edges ``(K, nbins+1)``."""
     backend = _resolve_backend_weighted(backend, x, w)
     if backend == "pallas":
-        return cp_objective.wcp_histogram_multi(x, w, edges)
+        return cp_objective.wcp_histogram_multi(x, w, edges,
+                                                 want_sums=want_sums)
     if backend == "pallas_interpret":
-        return cp_objective.wcp_histogram_multi(x, w, edges, interpret=True)
+        return cp_objective.wcp_histogram_multi(x, w, edges, interpret=True,
+                                                 want_sums=want_sums)
     if backend == "jnp":
         return ref.wcp_histogram_multi_ref(x, w, edges,
                                            impl=_resolve_impl(impl),
@@ -221,14 +227,15 @@ def fused_histogram(x, edges, *, backend: str | None = None,
     shape ``(nbins + 2,)`` (slot layout in
     ``kernels.ref.searchsorted_slots``).  One sweep buys log2(nbins)
     bisection-equivalents of bracket narrowing.  ``want_sums=False`` skips
-    ``bsum`` (returns ``None``) on the arithmetic jnp path — plain binned
+    ``bsum`` (returns ``None``) on every backend — plain binned
     sweeps never read it, only the polish does.
     """
     backend = _resolve_backend(backend, x)
     if backend == "pallas":
-        return cp_objective.cp_histogram(x, edges)
+        return cp_objective.cp_histogram(x, edges, want_sums=want_sums)
     if backend == "pallas_interpret":
-        return cp_objective.cp_histogram(x, edges, interpret=True)
+        return cp_objective.cp_histogram(x, edges, interpret=True,
+                                         want_sums=want_sums)
     if backend == "jnp":
         return ref.cp_histogram_ref(x, edges, impl=_resolve_impl(impl),
                                     want_sums=want_sums)
@@ -241,9 +248,11 @@ def fused_histogram_batched(x, edges, *, backend: str | None = None,
     """Row-wise binned pass: ``x`` (B, n), per-row edges ``(B, nbins+1)``."""
     backend = _resolve_backend(backend, x)
     if backend == "pallas":
-        return cp_objective.cp_histogram_batched(x, edges)
+        return cp_objective.cp_histogram_batched(x, edges,
+                                                  want_sums=want_sums)
     if backend == "pallas_interpret":
-        return cp_objective.cp_histogram_batched(x, edges, interpret=True)
+        return cp_objective.cp_histogram_batched(x, edges, interpret=True,
+                                                  want_sums=want_sums)
     if backend == "jnp":
         return ref.cp_histogram_batched_ref(x, edges,
                                             impl=_resolve_impl(impl),
@@ -261,9 +270,11 @@ def fused_histogram_multi(x, edges, *, backend: str | None = None,
     """
     backend = _resolve_backend(backend, x)
     if backend == "pallas":
-        return cp_objective.cp_histogram_multi(x, edges)
+        return cp_objective.cp_histogram_multi(x, edges,
+                                                want_sums=want_sums)
     if backend == "pallas_interpret":
-        return cp_objective.cp_histogram_multi(x, edges, interpret=True)
+        return cp_objective.cp_histogram_multi(x, edges, interpret=True,
+                                                want_sums=want_sums)
     if backend == "jnp":
         return ref.cp_histogram_multi_ref(x, edges,
                                           impl=_resolve_impl(impl),

@@ -192,6 +192,19 @@ def arithmetic_slots(x: jax.Array, edges: jax.Array, *,
     return c - down.astype(jnp.int32) + up.astype(jnp.int32)
 
 
+def _candidates_certified_rows(edges: jax.Array) -> jax.Array:
+    """Per-ladder soundness certificate: the all-edges test of
+    :func:`_candidates_certified`, reduced over the trailing (edge) axis
+    only.  For ``(K, nbins+1)`` edge ladders this returns a ``(K,)`` bool
+    vector — one degenerate ladder (a collapsed bracket, a polish ladder
+    whose uniform candidate misfires) rescues ONLY its own row, the other
+    K-1 ladders keep the arithmetic fast path."""
+    nbins = edges.shape[-1] - 1
+    ce = _arith_candidates(edges, edges)
+    i = jnp.arange(nbins + 1, dtype=jnp.int32)
+    return jnp.all((ce >= i) & (ce <= i + 1), axis=-1)
+
+
 def _candidates_certified(edges: jax.Array) -> jax.Array:
     """O(nbins) soundness certificate for the arithmetic candidates.
 
@@ -206,10 +219,7 @@ def _candidates_certified(edges: jax.Array) -> jax.Array:
     ladders) break the bound AT AN EDGE, so checking the ``nbins + 1``
     edges — instead of all ``n`` elements — loses nothing.
     """
-    nbins = edges.shape[-1] - 1
-    ce = _arith_candidates(edges, edges)
-    i = jnp.arange(nbins + 1, dtype=jnp.int32)
-    return jnp.all((ce >= i) & (ce <= i + 1))
+    return jnp.all(_candidates_certified_rows(edges))
 
 
 def bin_slots(x: jax.Array, edges: jax.Array,
@@ -295,6 +305,72 @@ def _factored_hist(slot, rows, nslots: int, dt):
     return [a.reshape(lead + (nslots,)) for a in acc]
 
 
+def _hist_multi_shared(x, edges, rows, nslots: int, dt):
+    """ONE-SWEEP shared-x multi-ladder histogram (the jnp analogue of the
+    multi-bracket Pallas kernel): ``x`` (n,) is read once per chunk and
+    every ladder's ``(nslots,)`` slot vector is accumulated from the
+    resident chunk — the K ladders share every data pass instead of
+    paying K broadcast passes, and no ``(K, n)`` intermediate ever exists
+    (everything per-chunk is capped at ``(K, HIST_CHUNK)``).
+
+    Exactness: the per-chunk slots are the verified arithmetic candidates
+    + ±1 widening of :func:`arithmetic_slots`, certified PER LADDER by
+    :func:`_candidates_certified_rows`; when every ladder certifies, the
+    scan runs arithmetic-only, otherwise a mixed scan also binary-searches
+    the chunk and each uncertified ladder takes the searchsorted slots —
+    per-k rescue, bit-identical counts to the searchsorted oracle either
+    way.  Count/sum accumulation follows :func:`_factored_hist` (per-chunk
+    0/1 sums exact in f32, int32 across chunks; value rows in ``dt``).
+
+    Returns ``[cnt int32, *sums dt]``, each shaped ``(K, nslots)``.
+    """
+    kk = edges.shape[0]
+    n = x.shape[-1]
+    m = min(HIST_CHUNK, max(n, 1))
+    npad = -(-n // m) * m
+    nc = npad // m
+    bf = int(np.ceil(np.sqrt(nslots)))
+    af = -(-nslots // bf)
+    sent = af * bf  # pad sentinel: hi factor == af matches no column
+    xp = jnp.pad(x, (0, npad - n)).reshape(nc, m)
+    validc = (jnp.arange(npad, dtype=jnp.int32) < n).reshape(nc, m)
+    vals = [jnp.pad(jnp.asarray(v, dt), (0, npad - n)).reshape(nc, m)
+            for v in rows]
+    certs = _candidates_certified_rows(edges)  # (K,)
+    ia = jnp.arange(af, dtype=jnp.int32)
+    ib = jnp.arange(bf, dtype=jnp.int32)
+
+    def _slots_arith(xc):
+        return arithmetic_slots(xc, edges)  # (K, m)
+
+    def _slots_mixed(xc):
+        # per-k rescue: only uncertified ladders take the binary search
+        return jnp.where(certs[:, None], arithmetic_slots(xc, edges),
+                         searchsorted_slots(xc, edges))
+
+    def _body(chunk_slots):
+        def body(acc, args):
+            xc, vc = args[0], args[1]
+            si = jnp.where(vc, chunk_slots(xc), sent)  # (K, m)
+            hi_oh = (si[..., None] // bf == ia).astype(dt)  # (K, m, A)
+            lo_oh = (si[..., None] % bf == ib).astype(dt)   # (K, m, B)
+            contract = lambda lhs: jnp.einsum(
+                "kma,kmb->kab", lhs, lo_oh).reshape(kk, -1)[:, :nslots]
+            out = [acc[0] + contract(hi_oh).astype(jnp.int32)]
+            for i, v in enumerate(args[2:]):
+                out.append(acc[i + 1] + contract(hi_oh * v[None, :, None]))
+            return tuple(out), None
+        return body
+
+    acc0 = (jnp.zeros((kk, nslots), jnp.int32),) + tuple(
+        jnp.zeros((kk, nslots), dt) for _ in rows)
+    run = lambda cs: jax.lax.scan(_body(cs), acc0, (xp, validc, *vals))[0]
+    acc = jax.lax.cond(jnp.all(certs),
+                       lambda: run(_slots_arith),
+                       lambda: run(_slots_mixed))
+    return list(acc)
+
+
 def _hist_ref(x, edges, rows, *, impl, want_sums):
     """Shared histogram-oracle core: slot assignment (per ``impl``) + the
     per-slot reductions.  ``rows(x)`` builds the value rows to sum (beyond
@@ -325,6 +401,10 @@ def _hist_ref(x, edges, rows, *, impl, want_sums):
                 *(v.reshape((-1,) + slot.shape[-1:]) for v in vals))
             return [a.reshape(lead + (nslots,)) for a in flat]
         return list(one(slot, *vals))
+    if x.ndim == 1 and edges.ndim == 2:
+        # shared-x multi mode: one sweep serves every ladder (no (K, n))
+        return _hist_multi_shared(x, edges, rows if want_sums else (),
+                                  nslots, dt)
     slot = bin_slots(x, edges, impl)
     return _factored_hist(slot, rows if want_sums else (), nslots, dt)
 
@@ -439,9 +519,13 @@ def _whist_ref(x, w, edges, *, impl, want_sums):
                         want_sums=want_sums)
         return out[0], out[1], out[2]
     nslots = edges.shape[-1] + 1
-    slot = bin_slots(x, edges, impl)
     rows = (w, w * x) if want_sums else (w,)
-    out = _factored_hist(slot, rows, nslots, edges.dtype)
+    if x.ndim == 1 and edges.ndim == 2:
+        # shared-x multi mode: one sweep serves every ladder (no (K, n))
+        out = _hist_multi_shared(x, edges, rows, nslots, edges.dtype)
+    else:
+        slot = bin_slots(x, edges, impl)
+        out = _factored_hist(slot, rows, nslots, edges.dtype)
     return out[0], out[1], (out[2] if len(out) > 2 else None)
 
 
@@ -486,3 +570,61 @@ def wcp_histogram_multi_ref(x: jax.Array, w: jax.Array, edges: jax.Array, *,
                       jnp.asarray(w, dt).reshape(-1),
                       jnp.asarray(edges, dt), impl=impl,
                       want_sums=want_sums)
+
+
+# ---------------------------------------------------------------------------
+# Segmented selection: per-segment slot assignment + histogram (each element
+# binned against its OWN segment's edge ladder — the per-leaf quantile pass)
+# ---------------------------------------------------------------------------
+
+
+def segmented_slots(x: jax.Array, seg: jax.Array,
+                    edges: jax.Array) -> jax.Array:
+    """Per-element slot within its own segment's ladder:
+    ``searchsorted_slots(x_i, edges[seg_i])`` without materializing
+    per-element edge rows.
+
+    Branchless binary search over the flattened ``(K, nbins+1)`` edge
+    array — ``ceil(log2(nbins+2))`` rounds of (n,)-shaped gathers, so K
+    ladders cost no extra memory traffic and no ``(n, nbins)`` or
+    ``(K, n)`` intermediate exists.  Comparisons run under the platform's
+    fp semantics against the REALIZED edges (the exactness contract), and
+    the result is bit-identical to the searchsorted oracle applied
+    segment-wise: ``pos = count(edges[seg] < x)`` with NaN forced to the
+    top slot (every NaN comparison is false — binary search walks right).
+    """
+    ne = edges.shape[-1]
+    ef = edges.reshape(-1)
+    seg = jnp.asarray(seg, jnp.int32)
+    base = seg * ne
+    pos = jnp.zeros(x.shape, jnp.int32)
+    step = 1
+    while step * 2 <= ne:
+        step *= 2
+    # invariant: all edges[seg][:pos] < x; steps p, p/2, .., 1 reach any
+    # count in [0, ne] (2p - 1 >= ne)
+    while step:
+        cand = pos + step
+        e = ef[jnp.clip(base + cand - 1, 0, ef.shape[0] - 1)]
+        pos = jnp.where((cand <= ne) & (e < x), cand, pos)
+        step //= 2
+    return jnp.where(jnp.isnan(x), ne, pos).astype(jnp.int32)
+
+
+def segmented_histogram_ref(x: jax.Array, seg: jax.Array, edges: jax.Array,
+                            rows=()):
+    """Per-segment histogram in ONE data pass: element ``i`` lands in slot
+    ``segmented_slots(x, seg, edges)[i]`` of segment ``seg[i]``'s
+    ``(nbins+2,)`` vector.  The flattened slot id ``seg*(nbins+2) + slot``
+    feeds the factored one-hot reduction, so all K segment histograms come
+    from one chunked sweep.  Returns ``[cnt int32, *sums]``, each
+    ``(K, nbins+2)`` (``rows`` as in :func:`_factored_hist`)."""
+    kk = edges.shape[0]
+    nslots = edges.shape[-1] + 1
+    dt = edges.dtype
+    x = jnp.asarray(x, dt)
+    slot = segmented_slots(x, seg, edges)
+    flat = jnp.asarray(seg, jnp.int32) * nslots + slot
+    out = _factored_hist(flat, tuple(jnp.asarray(v, dt) for v in rows),
+                         kk * nslots, dt)
+    return [a.reshape(kk, nslots) for a in out]

@@ -1,0 +1,97 @@
+"""Subprocess worker for the one-sweep multi-k distributed tests.
+
+Run as:  python tests/_dist_multi_k_worker.py <n_devices>
+Sets XLA_FLAGS *before* importing jax, then checks on an n = 1M array that
+K = 8 deciles resolve through ``sharded_multi_order_statistic`` /
+``sharded_quantiles`` with ONE psum of the (K, nbins+2) slot matrix:
+
+* exactness of every decile vs per-k np.partition (counting measure) and
+  vs the f64 sorted-cumsum oracle (weighted measure);
+* the round-count claim: with ``nbins=512, cap_local=4096`` every bracket
+  localizes under the per-shard cap after a single wide sweep, so
+  ``iters.max() == 1`` — one collective for the whole decile vector where
+  naive per-k dispatch would pay K full descents.
+
+Exits nonzero on failure.
+"""
+import sys
+
+from _dist_env import force_device_count
+
+n_dev = int(sys.argv[1]) if len(sys.argv) > 1 else 4
+force_device_count(n_dev)  # must run BEFORE the jax import below
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import _compat, distributed  # noqa: E402
+
+assert jax.device_count() == n_dev, jax.devices()
+
+NBINS = 512  # one wide sweep localizes all 8 deciles under cap_local
+CAP_LOCAL = 4096
+
+
+def check(cond, msg):
+    if not cond:
+        print("FAIL:", msg)
+        sys.exit(1)
+
+
+def main():
+    mesh = _compat.make_mesh((n_dev,), ("data",))
+    rng = np.random.default_rng(42)
+    n = 1 << 20
+    x = rng.standard_normal(n).astype(np.float32)
+    xj = jnp.asarray(x)
+    qs = [i / 10.0 for i in range(1, 9)]  # 8 deciles
+    ks = np.asarray([int(np.ceil(q * n)) for q in qs], np.int32)
+    want = np.partition(x, ks - 1)[ks - 1]
+
+    # --- counting measure: K=8 deciles, 1 psum round ---------------------
+    res = distributed.sharded_multi_order_statistic(
+        xj, jnp.asarray(ks), mesh, P("data"), method="binned",
+        nbins=NBINS, cap_local=CAP_LOCAL)
+    np.testing.assert_array_equal(np.asarray(res.value), want)
+    rounds = int(np.max(np.asarray(res.iters)))
+    check(rounds == 1, f"decile vector took {rounds} psum rounds, not 1")
+
+    # quantile-fraction front door resolves ranks host-side (f64) and
+    # routes through the same one-sweep engine
+    res_q = distributed.sharded_quantiles(
+        xj, qs, mesh, P("data"), method="binned",
+        nbins=NBINS, cap_local=CAP_LOCAL)
+    np.testing.assert_array_equal(np.asarray(res_q.value), want)
+    check(int(np.max(np.asarray(res_q.iters))) == 1, "quantiles rounds != 1")
+
+    # polish steering stays exact on the same knobs
+    res_p = distributed.sharded_multi_order_statistic(
+        xj, jnp.asarray(ks), mesh, P("data"), method="binned_polish",
+        nbins=NBINS, cap_local=CAP_LOCAL)
+    np.testing.assert_array_equal(np.asarray(res_p.value), want)
+    check(int(np.max(np.asarray(res_p.iters))) == 1, "polish rounds != 1")
+
+    # --- weighted measure ------------------------------------------------
+    w = rng.integers(0, 5, n).astype(np.float32)
+    w[0] = 1.0
+    o = np.argsort(x, kind="stable")
+    cumw = np.cumsum(w[o].astype(np.float64))
+    W = float(w.sum())
+    wks = np.asarray([np.float32(q * W) for q in qs], np.float32)
+    wwant = np.array(
+        [x[o][min(np.searchsorted(cumw, t, "left"), n - 1)] for t in wks],
+        np.float32)
+    wres = distributed.sharded_multi_order_statistic(
+        xj, jnp.asarray(wks), mesh, P("data"), method="binned",
+        nbins=NBINS, cap_local=CAP_LOCAL, weights=jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(wres.value), wwant)
+    wrounds = int(np.max(np.asarray(wres.iters)))
+    check(wrounds == 1, f"weighted deciles took {wrounds} rounds, not 1")
+
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -104,3 +104,36 @@ def test_multi_device_polish_subprocess(n_dev):
     assert out.returncode == 0, \
         f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
     assert "OK" in out.stdout
+
+
+def test_single_device_multi_k_deciles():
+    """1-device mesh sanity for the one-sweep multi-k front doors (round
+    economics live in the subprocess worker)."""
+    mesh = _compat.make_mesh((1,), ("data",))
+    rng = np.random.default_rng(11)
+    n = 1 << 17
+    x = rng.standard_normal(n).astype(np.float32)
+    qs = [i / 10.0 for i in range(1, 9)]
+    ks = np.asarray([int(np.ceil(q * n)) for q in qs], np.int32)
+    want = np.partition(x, ks - 1)[ks - 1]
+    res = distributed.sharded_multi_order_statistic(
+        jnp.asarray(x), jnp.asarray(ks), mesh, P("data"), method="binned")
+    np.testing.assert_array_equal(np.asarray(res.value), want)
+    res_q = distributed.sharded_quantiles(
+        jnp.asarray(x), qs, mesh, P("data"), method="binned_polish")
+    np.testing.assert_array_equal(np.asarray(res_q.value), want)
+
+
+@pytest.mark.parametrize("n_dev", [4])
+def test_multi_device_multi_k_one_round_subprocess(n_dev):
+    """K = 8 deciles at n = 1M: ONE psum of the (K, nbins+2) slot matrix
+    resolves the whole vector, both measures (see _dist_multi_k_worker)."""
+    env = _subprocess_env()
+    out = subprocess.run(
+        [sys.executable,
+         os.path.join(ROOT, "tests", "_dist_multi_k_worker.py"), str(n_dev)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert out.returncode == 0, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "OK" in out.stdout

@@ -1,0 +1,150 @@
+"""Property-based differentials for the one-sweep multi-k binned path.
+
+Hypothesis drives ``multi_order_statistic`` / ``weighted_multi_order_statistic``
+(methods ``binned`` and ``binned_polish`` — the shared-x one-sweep engine) and
+``segmented_quantiles`` against per-k ``np.partition`` / an f64 sorted-cumsum
+weighted oracle, asserting BIT-EXACTNESS.  Strategy notes match
+tests/test_property_selection.py: dyadic integer-derived floats maximize tie
+coverage and keep weighted masses exactly summable; ``scale_exp`` spans
+denormal-adjacent (2^-30) to inf-adjacent magnitudes.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import selection  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def to_f32(ints, scale_exp=0):
+    x = np.asarray(ints, np.float64) * (2.0 ** (scale_exp - 10))
+    return x.astype(np.float32)
+
+
+def weighted_oracle(x, w, wk):
+    o = np.argsort(x, kind="stable")
+    xs, ws = np.asarray(x)[o], np.asarray(w)[o]
+    c = np.cumsum(ws.astype(np.float64))
+    i = np.searchsorted(c, wk, side="left")
+    return xs[min(i, len(xs) - 1)]
+
+
+ints_small = st.lists(st.integers(-(2**20), 2**20), min_size=2, max_size=260)
+# duplicate-heavy: values drawn from a handful of levels (tie storms are the
+# hard case for a shared-x descent — every k's bracket collapses onto the
+# same handful of realized values)
+ints_dupes = st.lists(st.integers(-4, 4), min_size=2, max_size=260)
+scale_exps = st.integers(min_value=-20, max_value=97)
+methods = st.sampled_from(["binned", "binned_polish"])
+
+
+@settings(max_examples=40, deadline=None)
+@given(ints=ints_small, scale_exp=scale_exps, method=methods,
+       data=st.data())
+def test_multi_k_one_sweep_bit_exact(ints, scale_exp, method, data):
+    """K brackets narrowing off ONE histogram sweep per round must land on
+    exactly the same elements as K independent np.partition calls."""
+    x = to_f32(ints, scale_exp)
+    n = x.size
+    ks = np.asarray(
+        data.draw(st.lists(st.integers(1, n), min_size=1, max_size=8)),
+        np.int32)
+    res = selection.multi_order_statistic(
+        jnp.asarray(x), jnp.asarray(ks), method=method, backend="jnp",
+        maxit=256, cap=8)
+    want = np.partition(x, ks - 1)[ks - 1]
+    np.testing.assert_array_equal(np.asarray(res.value), want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(ints=ints_dupes, scale_exp=scale_exps, data=st.data())
+def test_multi_k_duplicate_storms(ints, scale_exp, data):
+    """Handfuls of levels: many ladders straddle the SAME tie block, so the
+    per-ladder certificates must each resolve independently."""
+    x = to_f32(ints, scale_exp)
+    n = x.size
+    ks = np.asarray(
+        data.draw(st.lists(st.integers(1, n), min_size=1, max_size=8)),
+        np.int32)
+    want = np.partition(x, ks - 1)[ks - 1]
+    for method in ["binned", "binned_polish"]:
+        res = selection.multi_order_statistic(
+            jnp.asarray(x), jnp.asarray(ks), method=method, backend="jnp",
+            maxit=256, cap=4)
+        np.testing.assert_array_equal(np.asarray(res.value), want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(ints=ints_small, scale_exp=scale_exps, method=methods,
+       data=st.data())
+def test_weighted_multi_k_one_sweep_bit_exact(ints, scale_exp, method, data):
+    """Weighted measure leg of the shared-x sweep vs the f64 cumsum oracle."""
+    x = to_f32(ints, scale_exp)
+    n = x.size
+    rng = np.random.default_rng(abs(hash(tuple(ints))) % (2**31))
+    w = rng.integers(0, 4, n).astype(np.float32)
+    w[0] = max(w[0], 1.0)
+    fracs = data.draw(st.lists(st.integers(0, 1000), min_size=1, max_size=6))
+    wks = np.maximum(np.asarray(fracs, np.float64) / 1000.0 * w.sum(),
+                     0.5).astype(np.float32)
+    res = selection.weighted_multi_order_statistic(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(wks), method=method,
+        backend="jnp", maxit=256, cap=8)
+    want = np.array([weighted_oracle(x, w, t) for t in wks], np.float32)
+    np.testing.assert_array_equal(np.asarray(res.value), want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(ints=ints_dupes, scale_exp=scale_exps, data=st.data())
+def test_weighted_multi_k_zero_mass_ties(ints, scale_exp, data):
+    """Tie blocks with massless members — the weighted ladder must skip
+    zero-weight elements exactly like the oracle, for every k at once."""
+    x = to_f32(ints, scale_exp)
+    n = x.size
+    w = np.asarray(
+        data.draw(st.lists(st.integers(0, 2), min_size=n, max_size=n)),
+        np.float32)
+    w[0] = max(w[0], 1.0)
+    fracs = data.draw(st.lists(st.integers(0, 1000), min_size=1, max_size=5))
+    wks = np.maximum(np.asarray(fracs, np.float64) / 1000.0 * w.sum(),
+                     0.5).astype(np.float32)
+    want = np.array([weighted_oracle(x, w, t) for t in wks], np.float32)
+    for method in ["binned", "binned_polish"]:
+        res = selection.weighted_multi_order_statistic(
+            jnp.asarray(x), jnp.asarray(w), jnp.asarray(wks), method=method,
+            backend="jnp", maxit=256, cap=4)
+        np.testing.assert_array_equal(np.asarray(res.value), want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 60), min_size=1, max_size=6),
+    scale_exp=scale_exps,
+    q=st.integers(min_value=1, max_value=999),
+    method=methods,
+    data=st.data(),
+)
+def test_segmented_quantiles_bit_exact(sizes, scale_exp, q, method, data):
+    """Per-segment quantiles off one shared sweep vs per-segment sorting."""
+    n = sum(sizes)
+    ints = data.draw(st.lists(st.integers(-(2**18), 2**18),
+                              min_size=n, max_size=n))
+    x = to_f32(ints, scale_exp)
+    seg = np.concatenate([np.full((s,), i, np.int32)
+                          for i, s in enumerate(sizes)])
+    rng = np.random.default_rng(abs(hash((tuple(sizes), q))) % (2**31))
+    perm = rng.permutation(n)
+    x, seg = x[perm], seg[perm]
+    res = selection.segmented_quantiles(
+        jnp.asarray(x), jnp.asarray(seg), q / 1000.0, sizes, method=method,
+        maxit=256)
+    want = np.array(
+        [np.sort(x[seg == i])[int(np.clip(np.ceil(q / 1000.0 * s), 1, s)) - 1]
+         for i, s in enumerate(sizes)], np.float32)
+    np.testing.assert_array_equal(np.asarray(res.value), want)
