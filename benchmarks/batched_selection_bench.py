@@ -198,6 +198,72 @@ def _distributed_rounds_record(rows, n_dev=4, log2_n=20):
     return None
 
 
+def _warm_start_record(rows, full: bool = False):
+    """Warm-vs-cold grids for the prior leg: ``lts_fit``/``irls_fit``
+    wall-clock at n = 1M plus drifting-stream re-select sweep counts.
+
+    Warm and cold runs are bit-identical by contract (asserted here); the
+    record captures the economy — steady-state sweeps and the wall-clock
+    ratio — for the perf trajectory and the CI warm <= cold smoke."""
+    from repro.core import robust, stream
+
+    n = 1 << 20
+    rng = np.random.default_rng(7)
+    xs = rng.standard_normal(n).astype(np.float32)
+    X = np.stack([np.ones_like(xs), xs], axis=1)
+    y = (2.0 + 3.0 * xs + 0.1 * rng.standard_normal(n)).astype(np.float32)
+    y = np.where(rng.random(n) < 0.2,
+                 50.0 * rng.standard_normal(n).astype(np.float32), y)
+    Xj, yj = jnp.asarray(X), jnp.asarray(y)
+    rec = {"n": n}
+
+    # --- IRLS: warm carry across scale steps ------------------------------
+    irls = lambda warm: robust.irls_fit(Xj, yj, loss="huber", iters=6,
+                                        method="binned", warm=warm)
+    fw, fc = irls(True), irls(False)
+    assert np.array_equal(np.asarray(fw.theta), np.asarray(fc.theta))
+    us_w = timeit(lambda: irls(True), reps=3, warmup=1) * 1e6
+    us_c = timeit(lambda: irls(False), reps=3, warmup=1) * 1e6
+    rec["irls"] = dict(
+        iters=6, us_warm=us_w, us_cold=us_c, speedup=us_c / us_w,
+        sweeps_warm=[int(s) for s in np.asarray(fw.sweeps)],
+        sweeps_cold=[int(s) for s in np.asarray(fc.sweeps)])
+    rows.append((f"irls_warm_vs_cold/n={n}", us_w,
+                 f"cold={us_c:.0f}us speedup={us_c / us_w:.2f}x"))
+
+    # --- LTS: warm carry across concentration steps -----------------------
+    key = jax.random.PRNGKey(0)
+    lts = lambda warm: robust.lts_fit(key, Xj, yj, n_starts=2, c_steps=5,
+                                      method="binned", warm=warm)
+    lw, lc = lts(True), lts(False)
+    assert np.array_equal(np.asarray(lw.theta), np.asarray(lc.theta))
+    us_w = timeit(lambda: lts(True), reps=3, warmup=1) * 1e6
+    us_c = timeit(lambda: lts(False), reps=3, warmup=1) * 1e6
+    rec["lts"] = dict(
+        n_starts=2, c_steps=5, us_warm=us_w, us_cold=us_c,
+        speedup=us_c / us_w,
+        sweeps_warm=[int(s) for s in np.asarray(lw.sweeps).max(axis=1)],
+        sweeps_cold=[int(s) for s in np.asarray(lc.sweeps).max(axis=1)])
+    rows.append((f"lts_warm_vs_cold/n={n}", us_w,
+                 f"cold={us_c:.0f}us speedup={us_c / us_w:.2f}x"))
+
+    # --- drifting stream: re-select sweeps per tick -----------------------
+    ticks = 6
+    tr = stream.QuantileTracker(0.5, method="binned")
+    cold_sweeps = []
+    for t in range(ticks):
+        xt = xs + 1e-3 * t * rng.standard_normal(n).astype(np.float32)
+        res = tr.update(xt)
+        coldr = selection.quantile(jnp.asarray(xt), 0.5, method="binned")
+        assert np.asarray(res.value) == np.asarray(coldr.value)
+        cold_sweeps.append(int(coldr.iters))
+    rec["stream"] = dict(ticks=ticks, sweeps_warm=tr.sweeps,
+                         sweeps_cold=cold_sweeps)
+    rows.append((f"stream_reselect/n={n}", float(sum(tr.sweeps)),
+                 f"cold_sweeps={sum(cold_sweeps)} per-tick={tr.sweeps}"))
+    return rec
+
+
 def run(full: bool = False, json_path: str | None = None):
     # quick mode keeps CI under a minute but still covers an n >= 1e6 point
     # (where the binned pass-count advantage is the whole story)
@@ -333,12 +399,15 @@ def run(full: bool = False, json_path: str | None = None):
     multi_k_recs = _multi_k_record(rows, full=full)
     hist_rec = _hist_pass_record(rows)
     dist_rec = _distributed_rounds_record(rows)
+    warm_rec = _warm_start_record(rows, full=full)
 
     emit(rows)
-    payload = {"bench": "batched_selection", "exact": True,
+    # schema 2: adds the schema field itself + the warm_start grids (PR 10)
+    payload = {"schema": 2, "bench": "batched_selection", "exact": True,
                "backend": jax.default_backend(), "grid": records,
                "weighted_grid": wrecords, "multi_k": multi_k_recs,
-               "hist_pass": hist_rec, "distributed": dist_rec}
+               "hist_pass": hist_rec, "distributed": dist_rec,
+               "warm_start": warm_rec}
     print("BENCH_JSON " + json.dumps(payload))
     if json_path is not None:
         with open(json_path, "w") as f:

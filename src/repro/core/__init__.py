@@ -24,8 +24,10 @@ from repro.core.selection import (
     HYBRID_SORT,
     METHODS,
     NOT_CONVERGED,
+    Prior,
     SelectResult,
     TIE_FALLBACK,
+    as_prior,
     median,
     multi_order_statistic,
     order_statistic,
@@ -40,12 +42,14 @@ from repro.core.selection import (
     weighted_quantiles,
     weighted_select_rows,
 )
+from repro.core.stream import QuantileTracker, reselect
 
 __all__ = [
     "FG", "WFG", "eval_fg", "eval_partials", "fg_from_partials",
     "os_weights", "wfg_from_partials",
     "Evaluator", "FnEvaluator", "RowsEvaluator", "SharedEvaluator",
     "ShardedEvaluator",
+    "Prior", "as_prior", "QuantileTracker", "reselect",
     "SelectResult", "order_statistic", "select_rows",
     "multi_order_statistic", "quantiles", "median", "quantile",
     "topk_threshold",

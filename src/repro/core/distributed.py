@@ -128,6 +128,7 @@ def local_order_statistic(
     nbins: int = selection.DEF_NBINS,
     weights: Optional[jax.Array] = None,
     binned_impl: Optional[str] = None,
+    prior=None,
 ) -> selection.SelectResult:
     """k-th smallest of the *global* (sharded) array; call inside shard_map.
 
@@ -169,8 +170,18 @@ def local_order_statistic(
     'cp' below — and stays on plain 'binned' until the polish schedule is
     TPU-validated.  ``binned_impl`` routes the LOCAL histogram pass's jnp
     slotting exactly as in ``selection.select_rows``.
+
+    ``prior`` (warm start, replicated scalar fields — a previous
+    replicated result or ``selection.Prior``): round 1's psum'd slot
+    vector is laid out by ``selection.prior_edges`` — the carried bracket
+    verbatim plus the collapse pair around the prior answer — so an
+    unchanged answer re-certifies in ONE psum round; the cp schedule
+    spends its first psum at the prior pivot instead of the analytic cut.
+    Same contract as the polish centroid: a stale/garbage/NaN prior costs
+    psum rounds, never exactness.
     """
     x_local = x_local.reshape(-1)
+    pr = selection.as_prior(prior)
     n_local = x_local.size
     axes_t = _axes_tuple(axes)
     if method == "auto":
@@ -236,6 +247,15 @@ def local_order_statistic(
         t = (s.fR - s.fL + s.yL * s.gL - s.yR * s.gR) / (s.gL - s.gR)
         bad = ~jnp.isfinite(t) | (t <= s.yL) | (t >= s.yR)
         t = jnp.where(bad, 0.5 * (s.yL + s.yR), t).astype(s.yL.dtype)
+        if pr is not None:
+            # warm start: the prior answer takes the FIRST psum round only
+            # (finite + strictly inside the bracket); the psum'd partials
+            # decide every move, so a wrong prior costs rounds, not
+            # exactness — an exact one certifies in one round
+            pv = jnp.asarray(pr.value, s.yL.dtype).reshape(())
+            use = ((s.it == 0) & jnp.isfinite(pv)
+                   & (pv > s.yL) & (pv < s.yR))
+            t = jnp.where(use, pv, t)
         # local partials kept un-psum'd too: the stopping rule bounds the
         # PER-SHARD in-bracket count so the local compaction never overflows
         loc = ev.local_partials(t)
@@ -262,6 +282,7 @@ def local_order_statistic(
         ), stalled
 
     polish = method == "binned_polish"
+    pb = None  # dt-converted prior for the binned rounds (set below)
 
     def binned_body(carry):
         from repro.kernels.ref import bin_edges  # deferred: core <-> kernels
@@ -277,6 +298,13 @@ def local_order_statistic(
             edges = selection.polish_edges(s.yL, s.yR, s.tp, nbins)
         else:
             edges = bin_edges(s.yL, s.yR, nbins)
+        if pb is not None:
+            # warm start: round 1's slot vector is laid out by the prior
+            # (carried bracket verbatim + the collapse pair); later rounds
+            # revert to the uniform/polish layout
+            edges = jnp.where(s.it == 0,
+                              selection.prior_edges(s.yL, s.yR, pb, nbins),
+                              edges)
         cnt_loc, mass_loc, msum_loc = ev.local_histogram(edges,
                                                          need_msum=polish)
         mass = _psum(mass_loc, axes)
@@ -330,6 +358,13 @@ def local_order_statistic(
         s0 = s0._replace(yL=s0.yL.astype(dt), yR=s0.yR.astype(dt),
                          t_exact=s0.t_exact.astype(dt),
                          tp=s0.tp.astype(dt))
+        if pr is not None:
+            pb = selection.Prior(
+                *(jnp.asarray(f, dt).reshape(()) for f in pr))
+            # the prior's carried cut beats the analytic polish seed
+            okc = (jnp.isfinite(pb.cut) & (pb.cut > s0.yL)
+                   & (pb.cut < s0.yR))
+            s0 = s0._replace(tp=jnp.where(okc, pb.cut, s0.tp))
         body = binned_body
     elif method == "cp":
         body = cp_body
@@ -424,6 +459,7 @@ def local_weighted_order_statistic(
     method: str = "binned",
     nbins: int = selection.DEF_NBINS,
     binned_impl: Optional[str] = None,
+    prior=None,
 ) -> selection.SelectResult:
     """Weighted order statistic of the *global* sharded array: the smallest
     element whose global cumulative weight reaches ``wk``.  Call inside
@@ -447,7 +483,7 @@ def local_weighted_order_statistic(
     return local_order_statistic(
         x_local, wk, axes, maxit=maxit, cap_local=cap_local,
         backend=backend, method=method, nbins=nbins, weights=w_local,
-        binned_impl=binned_impl)
+        binned_impl=binned_impl, prior=prior)
 
 
 def sharded_order_statistic(
@@ -547,6 +583,7 @@ def multi_order_statistic_across_shards(
     nbins: int = selection.DEF_NBINS,
     weights: Optional[jax.Array] = None,
     binned_impl: Optional[str] = None,
+    prior=None,
 ) -> selection.SelectResult:
     """K order statistics of the *global* sharded array in ONE round loop;
     call inside shard_map.  Returns a replicated ``(K,)`` SelectResult.
@@ -651,8 +688,9 @@ def multi_order_statistic_across_shards(
     ev = FnEvaluator(partials, jnp.asarray(n_glob, jnp.int32), kk,
                      init_stats, histogram=histogram,
                      weights_total=W if weighted else None)
-    s, xmin, xmax = selection._run_bracket_phase(ev, method, maxit,
-                                                 cap_local, nbins)
+    s, xmin, xmax = selection._run_bracket_phase(
+        ev, method, maxit, cap_local, nbins,
+        prior=selection.as_prior(prior))
 
     # ---- distributed finalize: compact per shard per k, gather, assemble
     cols = [(x_local, bigloc)]

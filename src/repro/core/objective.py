@@ -233,7 +233,18 @@ class Evaluator(Protocol):
     log2(nbins) bisection-equivalents per data pass — and, like the FG
     partials, the slot vectors combine additively across blocks/shards (a
     psum of ``nbins + 2`` scalars per problem is the whole multi-device
-    story)."""
+    story).
+
+    Edge-geometry contract: the engine owns edge PLACEMENT, and it is not
+    always uniform — polish sweeps splice a CP cut into the ladder, and
+    warm-started sweeps (``prior=``, see ``selection.prior_edges``) lay a
+    sharp collapse pair + geometric ladder around the carried answer.
+    Implementations must therefore accept ANY sorted, endpoint-pinned,
+    possibly-duplicated edge array (duplicates yield legitimate empty
+    slots) and bin by comparison against it — never by assuming equal
+    widths.  The verified-arithmetic fast path already honors this: its
+    width-based slot guess is checked against the realized edges and
+    rescued by ``searchsorted`` wherever the geometry disagrees."""
 
     n: jax.Array
     k: jax.Array

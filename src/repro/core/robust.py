@@ -89,6 +89,10 @@ class RobustFit(NamedTuple):
     theta: jax.Array
     objective: jax.Array
     inlier_weights: jax.Array  # LTS: 1 below cutoff, a/b at cutoff, 0 above
+    # per-concentration-step selection sweep counts, (c_steps, n_starts)
+    # int32 (None where the fit has no iterative selection): the
+    # warm-start instrumentation — steady state is 1 sweep per step
+    sweeps: Optional[jax.Array] = None
 
 
 def _elemental_thetas(key, X, y, n_starts):
@@ -109,23 +113,44 @@ def _elemental_thetas(key, X, y, n_starts):
 
 def _lts_weights(r, h):
     """Fractional trimming weights: 1 / (a/b) / 0 per the paper's rho."""
-    return _lts_weights_rows(r[None, :], h)[0]
+    return _lts_weights_rows(r[None, :], h)[0][0]
 
 
-def _lts_weights_rows(R, h, method=None):
+def _lts_weights_rows(R, h, method=None, prior=None):
     """Row-wise fractional trimming weights for (B, n) residual blocks.
 
     One rows-mode batched selection yields every row's cutoff m = |r|^2_(h)
     at once; ties at the cutoff get weight a/b so each row keeps EXACTLY h
-    points in total weight.
+    points in total weight.  ``prior`` warm-starts the cutoff selection
+    from the previous concentration step's result.  Returns
+    ``(weights, SelectResult)`` — the result feeds the next step's prior
+    and the sweep-count instrumentation.
     """
     a2 = R * R
-    m = selection.select_rows(a2, h, method=method).value[:, None]
+    res = selection.select_rows(a2, h, method=method, prior=prior)
+    m = res.value[:, None]
     b_lo = jnp.sum(a2 < m, axis=1, keepdims=True, dtype=jnp.int32)
     b_eq = jnp.sum(a2 == m, axis=1, keepdims=True, dtype=jnp.int32)
     a = jnp.asarray(h, jnp.int32) - b_lo
     frac = a.astype(a2.dtype) / jnp.maximum(b_eq, 1).astype(a2.dtype)
-    return jnp.where(a2 < m, 1.0, jnp.where(a2 == m, frac, 0.0))
+    return jnp.where(a2 < m, 1.0, jnp.where(a2 == m, frac, 0.0)), res
+
+
+def _carry_prior(res, shape, pdt) -> selection.Prior:
+    """SelectResult -> fixed-structure scan carry (shape/dtype pinned so a
+    cp-leg result and a binned-leg result produce the same carry pytree)."""
+    pr = selection.as_prior(res)
+    return selection.Prior(
+        *(jnp.broadcast_to(jnp.asarray(f, pdt), shape) for f in pr))
+
+
+def _nan_prior(shape, pdt) -> selection.Prior:
+    """Cold-start carry seed: all-NaN fields are sanitized away inside the
+    engine (a NaN prior degrades to the analytic/uniform layout), so step 1
+    of a warm scan behaves like a cold solve — exactly, on the counting
+    leg."""
+    nanv = jnp.full(shape, jnp.nan, pdt)
+    return selection.Prior(nanv, nanv, nanv, nanv)
 
 
 def _weighted_ls(X, y, w):
@@ -140,10 +165,10 @@ def _weighted_ls_rows(X, y, W):
 
 
 @functools.partial(jax.jit, static_argnames=("n_starts", "c_steps", "h",
-                                             "method"))
+                                             "method", "warm"))
 def lts_fit(key, X, y, *, h: Optional[int] = None, n_starts: int = 64,
-            c_steps: int = 10,
-            method: Optional[str] = None) -> RobustFit:
+            c_steps: int = 10, method: Optional[str] = None,
+            warm: bool = True) -> RobustFit:
     """FAST-LTS: elemental starts -> concentration steps -> best fit.
 
     Concentration runs starts-inside, steps-outside: each ``lax.scan`` step
@@ -156,25 +181,41 @@ def lts_fit(key, X, y, *, h: Optional[int] = None, n_starts: int = 64,
     ``method`` threads through to the batched selections (None = auto:
     'binned' for large n — every C-step then costs ~3 data passes over the
     (n_starts, n) residual block instead of ~15).
+
+    ``warm`` (default on): the scan carries each start's selection result
+    as a ``prior`` into the next step's cutoff selection — residuals
+    barely move between concentration steps, so steady-state steps take 1
+    binned sweep instead of a cold ~2-3 (the warm-started repeated
+    selection the engine's ``prior=`` leg exists for).  Results are
+    bit-identical to ``warm=False`` (the prior steers edge placement
+    only); ``RobustFit.sweeps`` records the per-step counts.
     """
     n, p = X.shape
     hh = (n + p + 1) // 2 if h is None else h
+    pdt = jnp.promote_types(X.dtype, jnp.float32)
 
     thetas0 = _elemental_thetas(key, X, y, n_starts)
 
-    def c_step(thetas, _):
+    def c_step(carry, _):
+        thetas, pr = carry
         R = thetas @ X.T - y[None, :]          # (n_starts, n) residuals
-        W = _lts_weights_rows(R, hh, method)   # one batched selection
-        return _weighted_ls_rows(X, y, W), None
+        W, res = _lts_weights_rows(R, hh, method,
+                                   prior=pr if warm else None)
+        pr_n = _carry_prior(res, (n_starts,), pdt)
+        return (_weighted_ls_rows(X, y, W), pr_n), res.iters
 
-    thetas, _ = jax.lax.scan(c_step, thetas0, None, length=c_steps)
-    objs = lts_objective_rows(thetas @ X.T - y[None, :], hh, method=method)
+    (thetas, prf), sweeps = jax.lax.scan(
+        c_step, (thetas0, _nan_prior((n_starts,), pdt)), None,
+        length=c_steps)
+    objs = lts_objective_rows(thetas @ X.T - y[None, :], hh, method=method,
+                              prior=prf if warm else None)
     best = jnp.argmin(objs)
     theta = thetas[best]
     return RobustFit(
         theta=theta,
         objective=objs[best],
         inlier_weights=_lts_weights(residuals(theta, X, y), hh),
+        sweeps=sweeps,
     )
 
 
@@ -218,13 +259,17 @@ class TheilSenFit(NamedTuple):
     intercept: jax.Array
     slope: jax.Array
     theta: jax.Array        # (2,) = [intercept, slope]
+    # (slope Prior, intercept Prior) carry for warm refits on drifted data;
+    # pass the whole fit back as ``prior=`` to the next call
+    prior: object = None
 
 
 @functools.partial(jax.jit, static_argnames=("weighting", "method",
                                              "max_pairs"))
 def theil_sen_fit(x, y, *, weighting: str = "sen",
                   method: Optional[str] = None,
-                  max_pairs: Optional[int] = None) -> TheilSenFit:
+                  max_pairs: Optional[int] = None,
+                  prior=None) -> TheilSenFit:
     """Theil-Sen simple regression via the weighted median of pairwise
     slopes.
 
@@ -277,11 +322,31 @@ def theil_sen_fit(x, y, *, weighting: str = "sen",
         w = valid.astype(x.dtype)
     else:
         raise ValueError(f"unknown weighting {weighting!r}")
-    slope = selection.weighted_median(
-        slopes.reshape(-1), w.reshape(-1), method=method).value
-    intercept = selection.median(y - slope * x, method=method).value
+    # warm start: accept a previous TheilSenFit (its ``prior`` carry, or —
+    # if that is absent — its point estimates) or an explicit
+    # (slope_prior, intercept_prior) pair; each leg is normalized through
+    # ``selection.as_prior`` so results, SelectResults, Priors and bare
+    # scalars all work.  Exactness never depends on the prior.
+    spr = ipr = None
+    if prior is not None:
+        if isinstance(prior, TheilSenFit):
+            if prior.prior is not None:
+                spr, ipr = prior.prior
+            else:
+                spr, ipr = prior.slope, prior.intercept
+        else:
+            spr, ipr = prior
+        spr = selection.as_prior(spr)
+        ipr = selection.as_prior(ipr)
+    sres = selection.weighted_median(
+        slopes.reshape(-1), w.reshape(-1), method=method, prior=spr)
+    slope = sres.value
+    ires = selection.median(y - slope * x, method=method, prior=ipr)
+    intercept = ires.value
     return TheilSenFit(intercept=intercept, slope=slope,
-                       theta=jnp.stack([intercept, slope]))
+                       theta=jnp.stack([intercept, slope]),
+                       prior=(selection.as_prior(sres),
+                              selection.as_prior(ires)))
 
 
 class IRLSFit(NamedTuple):
@@ -289,6 +354,9 @@ class IRLSFit(NamedTuple):
     scale: jax.Array        # final robust scale (weighted MAD estimate)
     weights: jax.Array      # final robustness weights (n,)
     objective: jax.Array    # sum of rho(r / scale) at the final iterate
+    # per-iteration weighted-median sweep counts, (iters,) int32 — the
+    # warm-start instrumentation — steady state is 1 sweep per iteration
+    sweeps: Optional[jax.Array] = None
 
 
 def _rho_weights(u, loss: str, c):
@@ -312,10 +380,11 @@ def _rho(u, loss: str, c):
     return (c * c / 6.0) * (1.0 - t ** 3)
 
 
-@functools.partial(jax.jit, static_argnames=("loss", "iters", "method"))
+@functools.partial(jax.jit, static_argnames=("loss", "iters", "method",
+                                             "warm"))
 def irls_fit(X, y, *, loss: str = "huber", c: Optional[float] = None,
              iters: int = 30, method: Optional[str] = None,
-             min_scale: float = 1e-12) -> IRLSFit:
+             min_scale: float = 1e-12, warm: bool = True) -> IRLSFit:
     """IRLS M-estimator (Huber / Tukey bisquare) with a weighted-engine
     scale step.
 
@@ -330,35 +399,47 @@ def irls_fit(X, y, *, loss: str = "huber", c: Optional[float] = None,
 
     ``c`` defaults to the 95%-efficiency constants (Huber 1.345, Tukey
     4.685).  ``method`` threads to the weighted selections.
+
+    ``warm`` (default on): the scan carries each iteration's weighted
+    median result as the next iteration's ``prior`` — residuals and
+    robustness weights move little between reweighting steps, so
+    steady-state scale steps take 1 binned sweep (bit-identical results,
+    see ``selection.Prior``).  ``IRLSFit.sweeps`` records the per-
+    iteration counts.
     """
     if c is None:
         c = 1.345 if loss == "huber" else 4.685
     n, p = X.shape
     dt = X.dtype
+    pdt = jnp.promote_types(dt, jnp.float32)
     theta0 = _weighted_ls(X, y, jnp.ones((n,), dt))
 
     def step(carry, _):
-        theta, w = carry
+        theta, w, pr = carry
         r = y - X @ theta
-        mad = selection.weighted_median(jnp.abs(r), w,
-                                        method=method).value
+        res = selection.weighted_median(jnp.abs(r), w, method=method,
+                                        prior=pr if warm else None)
+        mad = res.value
         sigma = jnp.maximum(1.4826 * mad, min_scale)
         u = r / sigma
         w_new = _rho_weights(u, loss, c)
         theta_new = _weighted_ls(X, y, w_new)
-        return (theta_new, w_new), sigma
+        return (theta_new, w_new, _carry_prior(res, (), pdt)), \
+            (sigma, res.iters)
 
-    (theta, w), _sigmas = jax.lax.scan(
-        step, (theta0, jnp.ones((n,), dt)), None, length=iters)
+    (theta, w, prf), (_sigmas, sweeps) = jax.lax.scan(
+        step, (theta0, jnp.ones((n,), dt), _nan_prior((), pdt)), None,
+        length=iters)
     # re-evaluate scale/weights/objective AT the returned theta (the scan
     # carries them one iterate stale: sigma was measured on the pre-refit
     # residuals, which would make objectives incomparable across iters)
     r = y - X @ theta
-    mad = selection.weighted_median(jnp.abs(r), w, method=method).value
+    mad = selection.weighted_median(jnp.abs(r), w, method=method,
+                                    prior=prf if warm else None).value
     scale = jnp.maximum(1.4826 * mad, min_scale)
     u = r / scale
     return IRLSFit(theta=theta, scale=scale, weights=_rho_weights(u, loss, c),
-                   objective=jnp.sum(_rho(u, loss, c)))
+                   objective=jnp.sum(_rho(u, loss, c)), sweeps=sweeps)
 
 
 def knn_predict(train_x, train_y, query_x, k: int, *, classify: bool = False,

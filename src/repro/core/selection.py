@@ -221,6 +221,40 @@ class SelectResult(NamedTuple):
     n_in: jax.Array         # count(y_lo < x <= y_hi) at exit
 
 
+class Prior(NamedTuple):
+    """Warm-start carry for repeated selection (``prior=`` on every public
+    API): the previous answer, its realized bracket, and the last polish
+    cut.  All fields are arrays broadcastable to the solve's batch shape
+    ((B,) rows / (K,) shared-x / scalar distributed).
+
+    The prior steers only the FIRST pivot (cp family) or the FIRST sweep's
+    edge PLACEMENT (binned family, :func:`prior_edges`) — exactly the
+    polish-cut contract: every narrowing decision and every certificate
+    still runs off measured prefix invariants, so a stale, garbage, NaN or
+    wrong-array prior costs sweeps (or a psum round), never exactness.
+    Build one from a previous :class:`SelectResult` with :func:`as_prior`
+    (also accepted directly as the ``prior=`` argument)."""
+    value: jax.Array   # previous answer
+    y_lo: jax.Array    # realized final bracket, reused verbatim as edges
+    y_hi: jax.Array
+    cut: jax.Array     # last polish cut (seeds the carried in-bin CP cut)
+
+
+def as_prior(prior) -> Optional["Prior"]:
+    """Normalize a ``prior=`` argument: ``None`` | :class:`Prior` |
+    :class:`SelectResult` (the natural carry — bracket reused verbatim,
+    the answer doubles as the cut) | bare value (answer-only seed)."""
+    if prior is None:
+        return None
+    if isinstance(prior, Prior):
+        return prior
+    if isinstance(prior, SelectResult):
+        return Prior(value=prior.value, y_lo=prior.y_lo, y_hi=prior.y_hi,
+                     cut=prior.value)
+    v = jnp.asarray(prior)
+    return Prior(value=v, y_lo=v, y_hi=v, cut=v)
+
+
 class BatchState(NamedTuple):
     """Bracket-loop state; every field is (B,)-shaped except the scalar
     global iteration counter ``it`` (frozen rows stop updating but the batch
@@ -353,6 +387,7 @@ def bracket_loop_batched(
     cap=0,
     found0: Optional[jax.Array] = None,
     t0: Optional[jax.Array] = None,
+    prior: Optional[Prior] = None,
 ):
     """Run the batched bracket-shrinking loop against an evaluator.
 
@@ -374,10 +409,20 @@ def bracket_loop_batched(
     elements, not mass.  ``found0``/``t0`` pre-seed rows whose answer is
     already certified (e.g. extreme ranks) so they never go live.
 
+    ``prior``: warm-start carry — the prior answer overrides the FIRST
+    proposal only, and only where it is finite and strictly inside the
+    open bracket; the measured partials decide every move, so an exact
+    prior certifies in one pass and a wrong one costs passes, never
+    exactness.
+
     Returns ``(final BatchState, xmin, xmax)`` with per-row extremes.
     """
     propose = _PROPOSALS[method]
     s0, xmin, xmax, kk, dtype = _seed_state(ev, found0, t0)
+    pv0 = None
+    if prior is not None:
+        pv0 = jnp.broadcast_to(jnp.asarray(prior.value, dtype),
+                               s0.yL.shape)
 
     def cond(s: BatchState):
         return (s.it < maxit) & jnp.any(_live(s, cap))
@@ -389,6 +434,10 @@ def bracket_loop_batched(
         # rows get the midpoint — their updates are masked out anyway)
         bad = ~jnp.isfinite(t) | (t <= s.yL) | (t >= s.yR)
         t = jnp.where(bad, 0.5 * (s.yL + s.yR), t).astype(dtype)
+        if pv0 is not None:
+            use = ((s.it == 0) & jnp.isfinite(pv0)
+                   & (pv0 > s.yL) & (pv0 < s.yR))
+            t = jnp.where(use, pv0, t)
         fg: FG = ev(t)
         exact = (fg.m_lt < kk) & (kk <= fg.m_le) & lv
         # exact => 0 in [g_lo, g_hi] => g_hi >= 0, so the two are disjoint:
@@ -510,6 +559,67 @@ def polish_edges(lo, hi, t, nbins: int):
     return e.at[..., 0].set(lo).at[..., -1].set(hi)
 
 
+def prior_edges(lo, hi, prior: Prior, nbins: int):
+    """Prior-seeded realized bin edges for the FIRST sweep of a warm solve.
+
+    Layout (``nbins + 1`` edges total, same realized-edges contract as
+    :func:`polish_edges` — sorted, clipped into ``[lo, hi]``, endpoints
+    pinned after the sort, built ONCE and shared by the histogram pass and
+    the narrowing decision):
+
+    * half the edges cover ``[lo, hi]`` uniformly — the worst-case
+      guarantee: a garbage prior still buys a factor ``nbins/2`` shrink;
+    * the prior's realized bracket endpoints ``y_lo``/``y_hi`` are placed
+      VERBATIM — when the data is unchanged, the carried bracket's
+      in-bracket count is already under cap, so the sweep-1 straddling bin
+      lands inside it and the row stops after ONE sweep;
+    * the pair ``(prev_float(value), value)`` — an unchanged answer makes
+      the straddling bin a single-representable-value bin, so the existing
+      ulp-collapse certificate in :func:`binned_descent_step` fires:
+      steady-state re-selection is 1 sweep WITH an exact-hit certificate;
+    * the rest is a geometric ladder around ``value`` at offsets
+      ``w0 * 2^j`` with ``w0 = max(y_hi - y_lo, 1 ulp)`` — small drift
+      lands in a bin about one prior-bracket wide (still ~cap elements).
+
+    Soundness is inherited, not re-proven: like the polish cut, the prior
+    chooses WHERE edges go; NaN/inf fields degrade to the bracket midpoint
+    and every certificate runs off measured prefix measures.
+    """
+    from repro.kernels.ref import bin_edges  # deferred: core <-> kernels
+
+    lo = jnp.asarray(lo)
+    hi = jnp.asarray(hi, lo.dtype)
+    dt = lo.dtype
+    mid = 0.5 * lo + 0.5 * hi
+    san = lambda v: jnp.clip(
+        jnp.where(jnp.isfinite(v), jnp.asarray(v, dt), mid), lo, hi)
+    pv = san(jnp.asarray(prior.value, dt))
+    plo = san(jnp.asarray(prior.y_lo, dt))
+    phi = san(jnp.asarray(prior.y_hi, dt))
+    nu = max(nbins // 2, 1)
+    r = nbins - nu
+    base = bin_edges(lo, hi, nu)                       # (..., nu + 1)
+    sharp = [pv, jnp.clip(transforms.prev_float(pv), lo, hi), plo, phi][:r]
+    m = (r - len(sharp)) // 2
+    extra = r - len(sharp) - 2 * m
+    parts = [base]
+    if sharp:
+        parts.append(jnp.stack(jnp.broadcast_arrays(*sharp), axis=-1))
+    if m > 0:
+        fmax = jnp.asarray(jnp.finfo(dt).max, dt)
+        w0 = jnp.maximum(phi - plo, transforms.next_float(pv) - pv)
+        w0 = jnp.clip(w0, jnp.asarray(jnp.finfo(dt).tiny, dt), fmax)
+        j = jnp.arange(m, dtype=dt)
+        d = jnp.clip(w0[..., None] * jnp.asarray(2.0, dt) ** j, 0, fmax)
+        lo1, hi1 = lo[..., None], hi[..., None]
+        parts.append(jnp.clip(pv[..., None] - d, lo1, hi1))
+        parts.append(jnp.clip(pv[..., None] + d, lo1, hi1))
+    if extra:
+        parts.append(jnp.broadcast_to(pv[..., None], pv.shape + (extra,)))
+    e = jnp.sort(jnp.concatenate(parts, axis=-1), axis=-1)
+    return e.at[..., 0].set(lo).at[..., -1].set(hi)
+
+
 def binned_loop_batched(
     ev: Evaluator,
     *,
@@ -519,6 +629,7 @@ def binned_loop_batched(
     found0: Optional[jax.Array] = None,
     t0: Optional[jax.Array] = None,
     polish: bool = False,
+    prior: Optional[Prior] = None,
 ):
     """Phase 1 of the binned two-phase schedule: histogram bracket descent.
 
@@ -566,6 +677,13 @@ def binned_loop_batched(
     still runs off measured prefix invariants, so a bad cut costs a sweep,
     never exactness.
 
+    ``prior`` (warm start): sweep 1's edges come from :func:`prior_edges`
+    instead of the uniform/polish layout — the prior's realized bracket
+    endpoints are reused verbatim and the ``(prev_float(value), value)``
+    pair makes an unchanged answer collapse-certify in exactly one sweep;
+    the prior's carried cut also seeds ``tp`` (overriding the analytic
+    polish seed).  Same contract as the polish cut: placement only.
+
     Returns ``(BatchState, xmin, xmax)`` like :func:`bracket_loop_batched`;
     the f/g cut fields keep their analytic seeds (only the polish seed
     reads them), and ``iters`` counts histogram sweeps.
@@ -587,6 +705,13 @@ def binned_loop_batched(
         bad = ~jnp.isfinite(t_seed) | (t_seed <= s0.yL) | (t_seed >= s0.yR)
         s0 = s0._replace(
             tp=jnp.where(bad, 0.5 * (s0.yL + s0.yR), t_seed).astype(dt))
+    pb = None
+    if prior is not None:
+        pb = Prior(*(jnp.broadcast_to(jnp.asarray(f, dt), s0.yL.shape)
+                     for f in prior))
+        # the prior's carried cut beats the analytic seed where usable
+        okc = jnp.isfinite(pb.cut) & (pb.cut > s0.yL) & (pb.cut < s0.yR)
+        s0 = s0._replace(tp=jnp.where(okc, pb.cut, s0.tp))
     stalled0 = jnp.zeros(s0.found_exact.shape, bool)
 
     def live(s, stalled):
@@ -605,6 +730,12 @@ def binned_loop_batched(
             edges = polish_edges(s.yL, s.yR, s.tp, nbins)
         else:
             edges = bin_edges(s.yL, s.yR, nbins)
+        if pb is not None:
+            # warm start: sweep 1 places its edges from the prior (the
+            # realized carried bracket verbatim + the collapse pair around
+            # the prior answer); later sweeps revert to the normal layout
+            edges = jnp.where(s.it == 0,
+                              prior_edges(s.yL, s.yR, pb, nbins), edges)
         cnt, mass, msum = ev.histogram(edges, need_msum=polish)
         # prefix measures at the realized edges drive the narrowing:
         # cum[..., j] = measure(x <= e_j)
@@ -662,12 +793,17 @@ def binned_loop_batched(
     return s, xmin, xmax
 
 
-def _run_bracket_phase(ev, method, maxit, cap, nbins):
-    """Dispatch the phase-1 loop for a resolved method (any evaluator leg)."""
+def _run_bracket_phase(ev, method, maxit, cap, nbins, prior=None):
+    """Dispatch the phase-1 loop for a resolved method (any evaluator leg).
+
+    ``prior`` threads the warm-start carry into whichever loop runs (first
+    sweep's edge placement / first proposal pivot — see the loops)."""
     if method in ("binned", "binned_polish"):
         return binned_loop_batched(ev, nbins=nbins, maxit=maxit, cap=cap,
-                                   polish=method == "binned_polish")
-    return bracket_loop_batched(ev, method=method, maxit=maxit, cap=cap)
+                                   polish=method == "binned_polish",
+                                   prior=prior)
+    return bracket_loop_batched(ev, method=method, maxit=maxit, cap=cap,
+                                prior=prior)
 
 
 def rank_compact(mask_in, cap: int, cols):
@@ -944,6 +1080,7 @@ def select_rows(
     backend: Optional[str] = None,
     nbins: Optional[int] = None,
     binned_impl: Optional[str] = None,
+    prior=None,
 ) -> SelectResult:
     """Rows-mode batched selection: ``x`` is (B, n), ``k`` scalar or (B,).
 
@@ -957,10 +1094,17 @@ def select_rows(
     ('searchsorted' | 'arithmetic' — bit-identical, for differential
     testing).  ``backend`` selects the fused data pass ('jnp' | 'pallas' |
     'pallas_interpret', default: pallas on TPU).
+
+    ``prior``: warm-start carry for repeated selection — ``None``, a
+    previous :class:`SelectResult` (fields (B,) or scalar), a
+    :class:`Prior`, or a bare value.  The result is bit-identical to a
+    cold solve under the engine's exactness contract (only sweep counts
+    change); an unchanged answer re-certifies in 1 sweep / 1 cp pass.
     """
     if x.ndim != 2:
         raise ValueError(f"select_rows wants (B, n) data, got {x.shape}")
     b, n = x.shape
+    prior = as_prior(prior)
     method = _resolve_method(method, n, backend)
     nbins = _resolve_nbins(nbins, backend, x.dtype)
     binned_impl = _check_binned_impl(binned_impl)
@@ -982,10 +1126,18 @@ def select_rows(
 
     if transform == "log1p":
         xt = transforms.log1p_transform_rows(x)
+        if prior is not None:
+            # map the (original-space) prior through the row anchors; a
+            # value below the anchor maps to NaN and is sanitized away
+            # inside prior_edges — the prior is advisory either way
+            x0 = jnp.min(x, axis=1)
+            ft = lambda v: jnp.log1p(jnp.asarray(v, x.dtype) - x0)
+            prior = Prior(ft(prior.value), ft(prior.y_lo),
+                          ft(prior.y_hi), ft(prior.cut))
         s, _, _ = _run_bracket_phase(
             RowsEvaluator(xt, ks, backend=backend,
                           binned_impl=binned_impl), method, maxit, cap,
-            nbins)
+            nbins, prior=prior)
         s = _map_bracket_back_rows(x, xt, s)
         return _finalize_rows(x, ks, s, cap,
                               jnp.min(x, axis=1), jnp.max(x, axis=1))
@@ -993,7 +1145,8 @@ def select_rows(
         raise ValueError(f"unknown transform {transform!r}")
 
     ev = RowsEvaluator(x, ks, backend=backend, binned_impl=binned_impl)
-    s, xmin, xmax = _run_bracket_phase(ev, method, maxit, cap, nbins)
+    s, xmin, xmax = _run_bracket_phase(ev, method, maxit, cap, nbins,
+                                       prior=prior)
     return _finalize_rows(x, ks, s, cap, xmin, xmax)
 
 
@@ -1008,6 +1161,7 @@ def order_statistic(
     backend: Optional[str] = None,
     nbins: Optional[int] = None,
     binned_impl: Optional[str] = None,
+    prior=None,
 ) -> SelectResult:
     """k-th smallest element of ``x`` (k is 1-indexed, may be traced).
 
@@ -1026,6 +1180,7 @@ def order_statistic(
         x[None, :], jnp.asarray(k, jnp.int32).reshape(1),
         method=method, maxit=maxit, cap=cap, transform=transform,
         backend=backend, nbins=nbins, binned_impl=binned_impl,
+        prior=as_prior(prior),
     )
     return jax.tree.map(lambda a: a[0], res)
 
@@ -1083,6 +1238,7 @@ def multi_order_statistic(
     backend: Optional[str] = None,
     nbins: Optional[int] = None,
     binned_impl: Optional[str] = None,
+    prior=None,
 ) -> SelectResult:
     """Several order statistics of the SAME array at once (shared-x mode).
 
@@ -1092,10 +1248,13 @@ def multi_order_statistic(
     cheap way to get (p25, p50, p75, p99, ...) telemetry sets.  The finalize
     compacts survivors per pivot straight from the ``(n,)`` array
     (:func:`_finalize_shared`), so neither the hot iterations nor the
-    finalize ever materialize ``(K, n)``.
+    finalize ever materialize ``(K, n)``.  ``prior`` warm-starts every
+    target's bracket from a previous ``(K,)`` result (see
+    :func:`select_rows`).
     """
     x = x.reshape(-1)
     n = x.size
+    prior = as_prior(prior)
     method = _resolve_method(method, n, backend)
     nbins = _resolve_nbins(nbins, backend, x.dtype)
     binned_impl = _check_binned_impl(binned_impl)
@@ -1118,10 +1277,15 @@ def multi_order_statistic(
 
     if transform == "log1p":
         xt, _ = transforms.log1p_transform(x)
+        if prior is not None:
+            x0 = jnp.min(x)
+            ft = lambda v: jnp.log1p(jnp.asarray(v, x.dtype) - x0)
+            prior = Prior(ft(prior.value), ft(prior.y_lo),
+                          ft(prior.y_hi), ft(prior.cut))
         s, _, _ = _run_bracket_phase(
             SharedEvaluator(xt, ks, backend=backend,
                             binned_impl=binned_impl), method, maxit, cap,
-            nbins)
+            nbins, prior=prior)
         s = _map_bracket_back_shared(x, xt, s)
         bcast = lambda v: jnp.broadcast_to(v, (nk,))
         return _finalize_shared(x, ks, s, cap,
@@ -1130,7 +1294,8 @@ def multi_order_statistic(
         raise ValueError(f"unknown transform {transform!r}")
 
     ev = SharedEvaluator(x, ks, backend=backend, binned_impl=binned_impl)
-    s, xmin, xmax = _run_bracket_phase(ev, method, maxit, cap, nbins)
+    s, xmin, xmax = _run_bracket_phase(ev, method, maxit, cap, nbins,
+                                       prior=prior)
     return _finalize_shared(x, ks, s, cap, xmin, xmax)
 
 
@@ -1192,6 +1357,7 @@ def segmented_order_statistic(
     maxit: int = 64,
     cap: Optional[int] = None,
     nbins: Optional[int] = None,
+    prior=None,
 ) -> SelectResult:
     """Per-segment order statistics of one concatenated array.
 
@@ -1268,7 +1434,8 @@ def segmented_order_statistic(
     from repro.core.objective import FnEvaluator
 
     ev = FnEvaluator(partials, counts, kk, init_stats, histogram=histogram)
-    s, xmin, xmax = _run_bracket_phase(ev, method, maxit, cap, nbins)
+    s, xmin, xmax = _run_bracket_phase(ev, method, maxit, cap, nbins,
+                                       prior=as_prior(prior))
     return _finalize_segmented(x, seg, kk, s, cap, xmin, xmax)
 
 
@@ -1336,6 +1503,7 @@ def weighted_select_rows(
     backend: Optional[str] = None,
     nbins: Optional[int] = None,
     binned_impl: Optional[str] = None,
+    prior=None,
 ) -> SelectResult:
     """Rows-mode weighted selection: ``x``/``w`` (B, n), ``wk`` scalar or
     (B,) target cumulative weights.
@@ -1377,7 +1545,8 @@ def weighted_select_rows(
             n_in=jnp.full((b,), n, jnp.int32),
         )
 
-    s, xmin, xmax = _run_bracket_phase(ev, method, maxit, cap, nbins)
+    s, xmin, xmax = _run_bracket_phase(ev, method, maxit, cap, nbins,
+                                       prior=as_prior(prior))
     return _finalize_rows(x, wkk, s, cap, xmin, xmax,
                           w=w.astype(wkk.dtype))
 
@@ -1393,6 +1562,7 @@ def weighted_order_statistic(
     backend: Optional[str] = None,
     nbins: Optional[int] = None,
     binned_impl: Optional[str] = None,
+    prior=None,
 ) -> SelectResult:
     """Smallest element of ``x`` whose cumulative weight reaches ``wk``.
 
@@ -1406,7 +1576,7 @@ def weighted_order_statistic(
         x[None, :], jnp.asarray(w).reshape(1, -1),
         jnp.asarray(wk).reshape(1),
         method=method, maxit=maxit, cap=cap, backend=backend, nbins=nbins,
-        binned_impl=binned_impl,
+        binned_impl=binned_impl, prior=as_prior(prior),
     )
     return jax.tree.map(lambda a: a[0], res)
 
@@ -1448,6 +1618,7 @@ def weighted_multi_order_statistic(
     backend: Optional[str] = None,
     nbins: Optional[int] = None,
     binned_impl: Optional[str] = None,
+    prior=None,
 ) -> SelectResult:
     """Several weighted order statistics of the SAME array at once.
 
@@ -1486,7 +1657,8 @@ def weighted_multi_order_statistic(
             n_in=jnp.full((nk,), n, jnp.int32),
         )
 
-    s, xmin, xmax = _run_bracket_phase(ev, method, maxit, cap, nbins)
+    s, xmin, xmax = _run_bracket_phase(ev, method, maxit, cap, nbins,
+                                       prior=as_prior(prior))
     return _finalize_shared(x, wkk, s, cap, xmin, xmax,
                             w=w.astype(wkk.dtype))
 

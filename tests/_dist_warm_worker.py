@@ -1,0 +1,114 @@
+"""Subprocess worker for the warm distributed re-selection tests.
+
+Run as:  python tests/_dist_warm_worker.py <n_devices>
+Sets XLA_FLAGS *before* importing jax (preserving caller flags other than a
+stale device-count), then checks on an n = 1M array:
+
+* warm re-selection (``prior=`` the previous round's replicated result)
+  resolves in ONE psum round where the cold run takes >= 2, with a
+  bit-identical value — both measures;
+* a drifted re-selection (same array + tiny perturbation) stays exact and
+  cheap; a 100%-replaced array with a stale prior stays exact (extra
+  rounds allowed, never a wrong value);
+* an adversarial NaN/inf prior never affects the value.
+
+Exits nonzero on failure.
+"""
+import sys
+
+from _dist_env import force_device_count
+
+n_dev = int(sys.argv[1]) if len(sys.argv) > 1 else 4
+force_device_count(n_dev)  # must run BEFORE the jax import below
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import _compat, distributed, selection  # noqa: E402
+
+assert jax.device_count() == n_dev, jax.devices()
+
+
+def check(cond, msg):
+    if not cond:
+        print("FAIL:", msg)
+        sys.exit(1)
+
+
+def main():
+    mesh = _compat.make_mesh((n_dev,), ("data",))
+    rng = np.random.default_rng(0)
+    n = 1 << 20
+    x = rng.standard_normal(n).astype(np.float32)
+    xj = jnp.asarray(x)
+    k = (n + 1) // 2
+    want = np.partition(x, k - 1)[k - 1]
+
+    # --- counting measure: cold >= 2 rounds, warm exactly 1 --------------
+    cold = distributed.sharded_order_statistic(xj, k, mesh, P("data"),
+                                               method="binned")
+    check(np.float32(cold.value) == want, f"cold {cold.value} != {want}")
+    check(int(cold.iters) >= 2,
+          f"cold unexpectedly took {int(cold.iters)} round(s)")
+    warm = distributed.sharded_order_statistic(
+        xj, k, mesh, P("data"), method="binned",
+        prior=selection.as_prior(jax.tree.map(jnp.asarray, cold)))
+    check(np.float32(warm.value) == want, f"warm {warm.value} != {want}")
+    check(int(warm.iters) == 1,
+          f"warm rounds at 1M: {int(warm.iters)} != 1")
+
+    # --- drifted re-selection: still exact, still cheap ------------------
+    x2 = x + 1e-4 * rng.standard_normal(n).astype(np.float32)
+    want2 = np.partition(x2, k - 1)[k - 1]
+    drift = distributed.sharded_order_statistic(
+        jnp.asarray(x2), k, mesh, P("data"), method="binned",
+        prior=selection.as_prior(cold))
+    check(np.float32(drift.value) == want2,
+          f"drift {drift.value} != {want2}")
+    check(int(drift.iters) <= int(cold.iters),
+          f"drift rounds {int(drift.iters)} > cold {int(cold.iters)}")
+
+    # --- stale prior after 100% replacement: exact, rounds may differ ----
+    x3 = (100.0 + 50.0 * rng.standard_normal(n)).astype(np.float32)
+    want3 = np.partition(x3, k - 1)[k - 1]
+    stale = distributed.sharded_order_statistic(
+        jnp.asarray(x3), k, mesh, P("data"), method="binned",
+        prior=selection.as_prior(cold))
+    check(np.float32(stale.value) == want3,
+          f"stale {stale.value} != {want3}")
+
+    # --- adversarial prior: NaN/inf fields never affect the value -------
+    bad = selection.Prior(value=jnp.asarray(jnp.nan),
+                          y_lo=jnp.asarray(-jnp.inf),
+                          y_hi=jnp.asarray(jnp.inf),
+                          cut=jnp.asarray(jnp.nan))
+    adv = distributed.sharded_order_statistic(xj, k, mesh, P("data"),
+                                              method="binned", prior=bad)
+    check(np.float32(adv.value) == want, f"adv {adv.value} != {want}")
+
+    # --- weighted measure: warm == cold value, 1 psum round --------------
+    w = rng.integers(1, 4, n).astype(np.float32)
+    o = np.argsort(x, kind="stable")
+    cumw = np.cumsum(w[o].astype(np.float64))
+    wk = float(np.float32(0.5 * w.sum()))
+    wwant = x[o][min(np.searchsorted(cumw, wk, "left"), n - 1)]
+    wcold = distributed.sharded_weighted_order_statistic(
+        xj, jnp.asarray(w), wk, mesh, P("data"), method="binned")
+    check(np.float32(wcold.value) == wwant,
+          f"wcold {wcold.value} != {wwant}")
+    wwarm = distributed.sharded_weighted_order_statistic(
+        xj, jnp.asarray(w), wk, mesh, P("data"), method="binned",
+        prior=selection.as_prior(wcold))
+    check(np.float32(wwarm.value) == wwant,
+          f"wwarm {wwarm.value} != {wwant}")
+    check(int(wwarm.iters) == 1,
+          f"wwarm rounds at 1M: {int(wwarm.iters)} != 1")
+    check(int(wwarm.iters) <= int(wcold.iters), "wwarm costlier than cold")
+
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

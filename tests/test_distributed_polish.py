@@ -124,6 +124,50 @@ def test_single_device_multi_k_deciles():
     np.testing.assert_array_equal(np.asarray(res_q.value), want)
 
 
+def test_single_device_warm_prior():
+    """1-device mesh sanity for the warm-start prior leg (the 1-psum-round
+    economics need real sharding and live in the subprocess worker)."""
+    mesh = _compat.make_mesh((1,), ("data",))
+    rng = np.random.default_rng(13)
+    n = 1 << 17
+    x = rng.standard_normal(n).astype(np.float32)
+    k = n // 2
+    want = np.partition(x, k - 1)[k - 1]
+    cold = distributed.sharded_order_statistic(
+        jnp.asarray(x), k, mesh, P("data"), method="binned")
+    warm = distributed.sharded_order_statistic(
+        jnp.asarray(x), k, mesh, P("data"), method="binned", prior=cold)
+    assert np.float32(cold.value) == want
+    assert np.float32(warm.value) == want
+    assert int(warm.iters) <= int(cold.iters)
+    # cp rounds accept the prior too
+    small = rng.standard_normal(1 << 12).astype(np.float32)
+    ksm = 1 << 11
+    csm = distributed.sharded_order_statistic(
+        jnp.asarray(small), ksm, mesh, P("data"), method="cp")
+    wsm = distributed.sharded_order_statistic(
+        jnp.asarray(small), ksm, mesh, P("data"), method="cp", prior=csm)
+    assert np.float32(wsm.value) == np.float32(csm.value) == \
+        np.partition(small, ksm - 1)[ksm - 1]
+    assert int(wsm.iters) <= int(csm.iters)
+
+
+@pytest.mark.parametrize("n_dev", [4])
+def test_multi_device_warm_one_round_subprocess(n_dev):
+    """Warm distributed re-selection at n = 1M: the carried bracket shrinks
+    round 1's psum'd slot vector so ONE round resolves it, both measures;
+    stale/adversarial priors never affect the value (_dist_warm_worker)."""
+    env = _subprocess_env()
+    out = subprocess.run(
+        [sys.executable,
+         os.path.join(ROOT, "tests", "_dist_warm_worker.py"), str(n_dev)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert out.returncode == 0, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "OK" in out.stdout
+
+
 @pytest.mark.parametrize("n_dev", [4])
 def test_multi_device_multi_k_one_round_subprocess(n_dev):
     """K = 8 deciles at n = 1M: ONE psum of the (K, nbins+2) slot matrix

@@ -382,3 +382,113 @@ def test_weighted_dtype_sweep(ints, use_f64, wf):
             maxit=256, cap=8)
         np.testing.assert_equal(np.float32(res.value),
                                 weighted_oracle(x32, w32, wk))
+
+
+# ---------------------------------------------------------------------------
+# warm-start prior leg (PR 10): arbitrary-prior invariance + sweep economy
+# ---------------------------------------------------------------------------
+
+# priors drawn INDEPENDENTLY of the data: special values + dyadic floats
+weird_floats = st.one_of(
+    st.sampled_from([float("nan"), float("inf"), float("-inf"), 0.0, -0.0]),
+    st.integers(-(2**20), 2**20).map(lambda i: i * 2.0 ** -10),
+    st.integers(-(2**20), 2**20).map(lambda i: i * 2.0 ** 20),
+)
+
+
+def _mk_prior(pv, plo, phi, pcut):
+    return selection.Prior(
+        value=jnp.asarray(np.float32(pv)), y_lo=jnp.asarray(np.float32(plo)),
+        y_hi=jnp.asarray(np.float32(phi)), cut=jnp.asarray(np.float32(pcut)))
+
+
+@settings(max_examples=60, deadline=None)
+@given(ints=ints_small, scale_exp=scale_exps,
+       kf=st.integers(min_value=0, max_value=1000), method=methods,
+       pv=weird_floats, plo=weird_floats, phi=weird_floats,
+       pcut=weird_floats)
+def test_arbitrary_prior_invariance(ints, scale_exp, kf, method,
+                                    pv, plo, phi, pcut):
+    """The result is pinned to ``np.partition`` for EVERY prior — the
+    prior only steers edge placement, never the answer."""
+    x = to_f32(ints, scale_exp)
+    n = x.size
+    k = max(1, min(n, 1 + (kf * n) // 1001))
+    expected = np.partition(x, k - 1)[k - 1]
+    res = selection.order_statistic(
+        jnp.asarray(x), k, method=method, maxit=256, cap=8,
+        prior=_mk_prior(pv, plo, phi, pcut))
+    np.testing.assert_equal(np.float32(res.value), expected)
+    assert int(res.status) != selection.NOT_CONVERGED
+
+
+@settings(max_examples=40, deadline=None)
+@given(ints=ints_dupes, scale_exp=scale_exps,
+       wf=st.integers(min_value=0, max_value=1000),
+       pv=weird_floats, pcut=weird_floats, data=st.data())
+def test_arbitrary_prior_invariance_weighted(ints, scale_exp, wf, pv, pcut,
+                                             data):
+    """Weighted leg pinned to the f64 sorted-cumsum oracle under arbitrary
+    priors, on duplicate-storm data (the hardest tie case)."""
+    x = to_f32(ints, scale_exp)
+    n = x.size
+    w = np.asarray(
+        data.draw(st.lists(st.integers(0, 3), min_size=n, max_size=n)),
+        np.float32)
+    w[0] = max(w[0], 1.0)
+    wk = float(np.float32(max(float(w.sum()) * wf / 1000.0, 0.5)))
+    prior = _mk_prior(pv, pv, pv, pcut)
+    for method in ["cp", "binned"]:
+        res = selection.weighted_order_statistic(
+            jnp.asarray(x), jnp.asarray(w), wk, method=method, maxit=256,
+            cap=4, prior=prior)
+        np.testing.assert_equal(np.float32(res.value),
+                                weighted_oracle(x, w, wk))
+
+
+@settings(max_examples=50, deadline=None)
+@given(ints=ints_small, scale_exp=scale_exps,
+       kf=st.integers(min_value=0, max_value=1000))
+def test_exact_prior_sweep_economy(ints, scale_exp, kf):
+    """An exact prior (the previous run's own result) resolves in <= 1
+    binned sweep: the ``prev_float(v)``/``v`` collapse pair certifies an
+    unchanged answer immediately."""
+    x = to_f32(ints, scale_exp)
+    n = x.size
+    k = max(1, min(n, 1 + (kf * n) // 1001))
+    expected = np.partition(x, k - 1)[k - 1]
+    # answers at exactly 0.0 cannot form a collapse pair under FTZ
+    # (prev_float(0) is a denormal the CPU flushes) — exactness holds but
+    # the 1-sweep economy legitimately does not
+    hypothesis.assume(expected != 0.0)
+    cold = selection.order_statistic(jnp.asarray(x), k, method="binned",
+                                     maxit=256, cap=8)
+    warm = selection.order_statistic(jnp.asarray(x), k, method="binned",
+                                     maxit=256, cap=8, prior=cold)
+    np.testing.assert_equal(np.float32(warm.value), expected)
+    assert int(warm.iters) <= 1
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    a=st.integers(-(2**20), 2**20),
+    b=st.integers(-(2**20), 2**20),
+    scale_exp=scale_exps,
+    pv=weird_floats, plo=weird_floats, phi=weird_floats,
+    pcut=weird_floats,
+    nbins=st.sampled_from([2, 3, 4, 8, 128]),
+)
+def test_prior_edges_contract(a, b, scale_exp, pv, plo, phi, pcut, nbins):
+    """``prior_edges`` honors the realized-edge contract for ANY prior:
+    sorted ``nbins + 1`` output, endpoints pinned to lo/hi EXACTLY, every
+    edge a finite realized fp value inside ``[lo, hi]``."""
+    lo, hi = np.sort(to_f32([min(a, b), max(a, b)], scale_exp))
+    e = np.asarray(selection.prior_edges(
+        jnp.asarray(np.float32(lo)), jnp.asarray(np.float32(hi)),
+        _mk_prior(pv, plo, phi, pcut), nbins))
+    assert e.shape == (nbins + 1,)
+    assert e[0] == lo and e[-1] == hi
+    assert np.all(np.diff(e) >= 0)
+    assert np.all((e >= lo) & (e <= hi))
+    assert np.all(np.isfinite(e)) or (not np.isfinite(lo)
+                                      or not np.isfinite(hi))

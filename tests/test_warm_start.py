@@ -1,0 +1,401 @@
+"""Warm-start test wall: the ``prior=`` carry NEVER affects exactness.
+
+Differential suite for the prior leg (PR 10): every public selection API,
+every method family, both measures and both kernel backends must return
+BIT-IDENTICAL values warm and cold — including under adversarial priors
+(NaN/±inf cut, bracket excluding the true answer, prior from a different
+array, stale prior after 100% data replacement).  Only sweep counts may
+differ; the economy half of the contract (an exact prior resolves in one
+binned sweep; warm LTS/IRLS steady state = 1 sweep per iteration) is
+pinned by instrumented-counter assertions.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import selection, robust, stream
+
+jax.config.update("jax_platform_name", "cpu")
+
+# large enough that method=None resolves to 'binned' and real sweeps run
+# (above the scalar cap), small enough to stay fast on CPU
+N = 1 << 17
+METHODS = ["binned", "binned_polish", "cp", "bisection"]
+BACKENDS = ["jnp", "pallas_interpret"]
+
+
+def _data(seed, n=N):
+    rng = np.random.default_rng(seed)
+    # duplicate-heavy + smooth mix: ties are the hard case for selection
+    x = np.where(rng.random(n) < 0.3,
+                 rng.integers(-4, 5, size=n).astype(np.float32),
+                 rng.standard_normal(n).astype(np.float32))
+    return x
+
+
+def kth(x, k):
+    return np.partition(np.asarray(x), k - 1)[k - 1]
+
+
+# ---------------------------------------------------------------------------
+# warm == cold bit-for-bit: method × measure × backend
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_warm_equals_cold_counting(method, backend):
+    x = jnp.asarray(_data(0))
+    k = N // 3
+    cold = selection.order_statistic(x, k, method=method, backend=backend)
+    warm = selection.order_statistic(x, k, method=method, backend=backend,
+                                     prior=cold)
+    assert np.asarray(warm.value) == np.asarray(cold.value) == kth(x, k)
+    assert int(warm.iters) <= int(cold.iters)
+
+
+@pytest.mark.parametrize("method", ["binned", "binned_polish", "cp"])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_warm_equals_cold_weighted(method, backend):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(_data(1))
+    # dyadic weights: exactly summable, so bit-exact comparison is sound
+    w = jnp.asarray((rng.integers(1, 9, size=N) * 0.25).astype(np.float32))
+    cold = selection.weighted_median(x, w, method=method, backend=backend)
+    warm = selection.weighted_median(x, w, method=method, backend=backend,
+                                     prior=cold)
+    assert np.asarray(warm.value) == np.asarray(cold.value)
+    assert int(warm.iters) <= int(cold.iters)
+
+
+@pytest.mark.parametrize("method", ["binned", "binned_polish", "cp"])
+def test_warm_equals_cold_rows(method):
+    rng = np.random.default_rng(2)
+    b, n = 6, 30_000
+    x = rng.standard_normal((b, n)).astype(np.float32)
+    ks = rng.integers(1, n + 1, size=b).astype(np.int32)
+    cold = selection.select_rows(jnp.asarray(x), jnp.asarray(ks),
+                                 method=method)
+    warm = selection.select_rows(jnp.asarray(x), jnp.asarray(ks),
+                                 method=method, prior=cold)
+    np.testing.assert_array_equal(np.asarray(warm.value),
+                                  np.asarray(cold.value))
+    np.testing.assert_array_equal(
+        np.asarray(cold.value),
+        [kth(row, k) for row, k in zip(x, ks)])
+    assert int(jnp.max(warm.iters)) <= int(jnp.max(cold.iters))
+
+
+@pytest.mark.parametrize("method", ["binned", "binned_polish", "cp"])
+def test_warm_equals_cold_multi_k(method):
+    x = jnp.asarray(_data(3))
+    ks = jnp.asarray([1, N // 4, N // 2, 3 * N // 4, N], jnp.int32)
+    cold = selection.multi_order_statistic(x, ks, method=method)
+    warm = selection.multi_order_statistic(x, ks, method=method, prior=cold)
+    np.testing.assert_array_equal(np.asarray(warm.value),
+                                  np.asarray(cold.value))
+
+
+def test_warm_equals_cold_segmented():
+    rng = np.random.default_rng(4)
+    n, nsegs = 60_000, 5
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    seg = jnp.asarray(rng.integers(0, nsegs, size=n).astype(np.int32))
+    sizes = np.bincount(np.asarray(seg), minlength=nsegs)
+    ks = jnp.asarray((sizes // 2 + 1).astype(np.int32))
+    cold = selection.segmented_order_statistic(x, seg, ks, nsegs=nsegs,
+                                               method="binned")
+    warm = selection.segmented_order_statistic(x, seg, ks, nsegs=nsegs,
+                                               method="binned", prior=cold)
+    np.testing.assert_array_equal(np.asarray(warm.value),
+                                  np.asarray(cold.value))
+
+
+def test_warm_equals_cold_log1p_transform():
+    """Prior values live in DATA space; the log1p leg must map them into
+    transform space before seeding edges."""
+    x = np.abs(_data(5)) + 1.0
+    x[:16] = 1e20  # extreme magnitudes: the transform's reason to exist
+    xj = jnp.asarray(x)
+    k = N // 2
+    cold = selection.order_statistic(xj, k, method="binned",
+                                     transform="log1p")
+    warm = selection.order_statistic(xj, k, method="binned",
+                                     transform="log1p", prior=cold)
+    assert np.asarray(warm.value) == np.asarray(cold.value) == kth(x, k)
+
+
+def test_warm_equals_cold_weighted_multi():
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(_data(6))
+    w = jnp.asarray((rng.integers(1, 5, size=N) * 0.5).astype(np.float32))
+    W = float(np.sum(np.asarray(w, np.float64)))
+    wks = jnp.asarray([0.1 * W, 0.5 * W, 0.9 * W], jnp.float32)
+    cold = selection.weighted_multi_order_statistic(x, w, wks,
+                                                    method="binned")
+    warm = selection.weighted_multi_order_statistic(x, w, wks,
+                                                    method="binned",
+                                                    prior=cold)
+    np.testing.assert_array_equal(np.asarray(warm.value),
+                                  np.asarray(cold.value))
+
+
+# ---------------------------------------------------------------------------
+# adversarial priors: exactness is NEVER a function of the prior
+# ---------------------------------------------------------------------------
+
+
+def _adversarial_priors(x, k):
+    """Priors engineered to be maximally misleading for ``x_(k)``."""
+    f32 = np.float32
+    mk = lambda v, lo, hi, cut: selection.Prior(
+        value=jnp.asarray(v, jnp.float32), y_lo=jnp.asarray(lo, jnp.float32),
+        y_hi=jnp.asarray(hi, jnp.float32), cut=jnp.asarray(cut, jnp.float32))
+    ans = kth(x, k)
+    far = f32(ans + 1000.0)
+    return {
+        "nan_everything": mk(np.nan, np.nan, np.nan, np.nan),
+        "inf_cut": mk(ans, ans - 1, ans + 1, np.inf),
+        "neg_inf_cut": mk(ans, ans - 1, ans + 1, -np.inf),
+        "inf_bracket": mk(0.0, -np.inf, np.inf, 0.0),
+        "bracket_excludes_answer": mk(far, far - 1, far + 1, far),
+        "inverted_bracket": mk(ans, ans + 5, ans - 5, ans),
+        "zero_width": mk(far, far, far, far),
+    }
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_adversarial_priors_bitexact(method):
+    x = _data(7)
+    xj = jnp.asarray(x)
+    k = N // 2
+    cold = selection.order_statistic(xj, k, method=method)
+    for name, pr in _adversarial_priors(x, k).items():
+        warm = selection.order_statistic(xj, k, method=method, prior=pr)
+        assert np.asarray(warm.value) == np.asarray(cold.value), name
+        assert int(warm.status) != selection.NOT_CONVERGED, name
+
+
+def test_prior_from_different_array():
+    """A prior realized on array A steers selection on unrelated array B:
+    values must still match B's cold answer exactly."""
+    a = jnp.asarray(_data(8))
+    b = jnp.asarray(_data(9) * 50.0 + 17.0)
+    k = N // 4
+    pr = selection.order_statistic(a, k, method="binned")
+    for method in METHODS:
+        cold = selection.order_statistic(b, k, method=method)
+        warm = selection.order_statistic(b, k, method=method, prior=pr)
+        assert np.asarray(warm.value) == np.asarray(cold.value), method
+
+
+def test_stale_prior_after_full_replacement():
+    """100% data replacement between ticks: the stale prior costs sweeps,
+    never exactness."""
+    old = jnp.asarray(_data(10))
+    new = jnp.asarray(_data(11) * -3.0 + 100.0)
+    k = N // 2
+    stale = selection.order_statistic(old, k, method="binned")
+    cold = selection.order_statistic(new, k, method="binned")
+    warm = selection.order_statistic(new, k, method="binned", prior=stale)
+    assert np.asarray(warm.value) == np.asarray(cold.value) == kth(new, k)
+
+
+def test_adversarial_prior_weighted_and_rows():
+    rng = np.random.default_rng(12)
+    x = jnp.asarray(_data(12))
+    w = jnp.asarray((rng.integers(1, 9, size=N) * 0.25).astype(np.float32))
+    bad = selection.Prior(value=jnp.asarray(jnp.nan),
+                          y_lo=jnp.asarray(-jnp.inf),
+                          y_hi=jnp.asarray(jnp.inf),
+                          cut=jnp.asarray(jnp.nan))
+    cold = selection.weighted_median(x, w, method="binned_polish")
+    warm = selection.weighted_median(x, w, method="binned_polish", prior=bad)
+    assert np.asarray(warm.value) == np.asarray(cold.value)
+
+    b, n = 4, 20_000
+    X = rng.standard_normal((b, n)).astype(np.float32)
+    ks = rng.integers(1, n + 1, size=b).astype(np.int32)
+    coldr = selection.select_rows(jnp.asarray(X), jnp.asarray(ks),
+                                  method="binned")
+    warmr = selection.select_rows(jnp.asarray(X), jnp.asarray(ks),
+                                  method="binned", prior=bad)
+    np.testing.assert_array_equal(np.asarray(warmr.value),
+                                  np.asarray(coldr.value))
+
+
+# ---------------------------------------------------------------------------
+# sweep economy: an exact prior resolves in one sweep
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_exact_prior_one_sweep(backend):
+    # +0.5 keeps the median tie block away from 0.0: FTZ flushes the
+    # denormal ``prev_float(0.0)``, so a zero-valued answer cannot form a
+    # collapse pair and legitimately costs an extra sweep (exactness is
+    # unaffected — the adversarial tests cover ties at zero)
+    x = jnp.asarray(_data(13)) + 0.5
+    k = N // 2
+    cold = selection.order_statistic(x, k, method="binned", backend=backend)
+    warm = selection.order_statistic(x, k, method="binned", backend=backend,
+                                     prior=cold)
+    assert int(cold.iters) >= 1
+    assert int(warm.iters) <= 1
+    assert int(warm.status) == selection.EXACT_HIT
+
+
+def test_exact_prior_one_sweep_all_modes():
+    rng = np.random.default_rng(14)
+    x = jnp.asarray(_data(14)) + 0.5  # nonzero answers (see above)
+    # rows
+    b, n = 4, 40_000
+    X = jnp.asarray(rng.standard_normal((b, n)).astype(np.float32))
+    ks = jnp.asarray(rng.integers(1, n + 1, size=b).astype(np.int32))
+    c = selection.select_rows(X, ks, method="binned")
+    wres = selection.select_rows(X, ks, method="binned", prior=c)
+    assert int(jnp.max(wres.iters)) <= 1
+    # multi-k
+    kk = jnp.asarray([1, N // 2, N], jnp.int32)
+    c = selection.multi_order_statistic(x, kk, method="binned")
+    wres = selection.multi_order_statistic(x, kk, method="binned", prior=c)
+    assert int(jnp.max(wres.iters)) <= 1
+    # weighted
+    w = jnp.asarray((rng.integers(1, 5, size=N) * 0.5).astype(np.float32))
+    c = selection.weighted_median(x, w, method="binned")
+    wres = selection.weighted_median(x, w, method="binned", prior=c)
+    assert int(wres.iters) <= 1
+
+
+# ---------------------------------------------------------------------------
+# iterative consumers: warm == cold fits, steady state = 1 sweep
+# ---------------------------------------------------------------------------
+
+
+def _regression(seed, n):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32)
+    X = np.stack([np.ones_like(x), x], axis=1)
+    y = (2.0 + 3.0 * x + 0.1 * rng.standard_normal(n)).astype(np.float32)
+    out = rng.random(n) < 0.2  # 20% gross contamination
+    y = np.where(out, 50.0 * rng.standard_normal(n).astype(np.float32), y)
+    return jnp.asarray(X), jnp.asarray(y)
+
+
+def test_irls_warm_equals_cold_and_steady_state():
+    X, y = _regression(20, N)
+    fw = robust.irls_fit(X, y, loss="huber", iters=8, method="binned",
+                         warm=True)
+    fc = robust.irls_fit(X, y, loss="huber", iters=8, method="binned",
+                         warm=False)
+    np.testing.assert_array_equal(np.asarray(fw.theta), np.asarray(fc.theta))
+    np.testing.assert_array_equal(np.asarray(fw.scale), np.asarray(fc.scale))
+    sw, sc = np.asarray(fw.sweeps), np.asarray(fc.sweeps)
+    # monotone warm-up, then steady state: once the scale settles every
+    # warm iteration takes ONE sweep
+    assert np.all(np.diff(sw) <= 0), sw
+    assert np.all(sw[-4:] == 1), sw
+    assert np.all(sw <= sc)
+
+
+def test_lts_warm_equals_cold_and_steady_state():
+    X, y = _regression(21, N)
+    key = jax.random.PRNGKey(0)
+    fw = robust.lts_fit(key, X, y, n_starts=4, c_steps=6, method="binned",
+                        warm=True)
+    fc = robust.lts_fit(key, X, y, n_starts=4, c_steps=6, method="binned",
+                        warm=False)
+    np.testing.assert_array_equal(np.asarray(fw.theta), np.asarray(fc.theta))
+    np.testing.assert_array_equal(np.asarray(fw.objective),
+                                  np.asarray(fc.objective))
+    sw, sc = np.asarray(fw.sweeps), np.asarray(fc.sweeps)  # (c_steps, B)
+    assert np.all(sw <= sc)
+    # steady state: the final concentration step averages ~1 sweep per start
+    assert float(sw[-1].mean()) <= 2.0, sw
+    assert np.any(sw[1:] == 1), sw
+
+
+def test_theil_sen_warm_equals_cold():
+    rng = np.random.default_rng(22)
+    n = 1500
+    x = rng.standard_normal(n).astype(np.float32)
+    y = (1.5 * x - 0.5 + 0.05 * rng.standard_normal(n)).astype(np.float32)
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+    cold = robust.theil_sen_fit(xj, yj)
+    warm_fit = robust.theil_sen_fit(xj, yj, prior=cold)
+    np.testing.assert_array_equal(np.asarray(warm_fit.theta),
+                                  np.asarray(cold.theta))
+    warm_pair = robust.theil_sen_fit(xj, yj,
+                                     prior=(cold.slope, cold.intercept))
+    np.testing.assert_array_equal(np.asarray(warm_pair.theta),
+                                  np.asarray(cold.theta))
+
+
+# ---------------------------------------------------------------------------
+# drifting stream
+# ---------------------------------------------------------------------------
+
+
+def test_stream_tracker_steady_state_and_exact():
+    rng = np.random.default_rng(23)
+    base = rng.standard_normal(N).astype(np.float32)
+    t = stream.QuantileTracker(0.5, method="binned")
+    for tick in range(5):
+        x = base + 0.001 * tick * rng.standard_normal(N).astype(np.float32)
+        res = t.update(x)
+        coldv = selection.quantile(jnp.asarray(x), 0.5,
+                                   method="binned").value
+        assert np.asarray(res.value) == np.asarray(coldv)
+    assert t.sweeps[-1] == 1, t.sweeps
+    assert all(s <= t.sweeps[0] for s in t.sweeps)
+    t.reset()
+    assert t.prior is None and t.sweeps == []
+
+
+def test_stream_reselect_survives_regime_change():
+    """A stream whose distribution jumps mid-flight: warm re-selection on
+    the jumped tick still returns the exact answer."""
+    rng = np.random.default_rng(24)
+    a = rng.standard_normal(N).astype(np.float32)
+    b = (100.0 + 50.0 * rng.standard_normal(N)).astype(np.float32)
+    k = N // 2
+    _, pr = stream.reselect(jnp.asarray(a), k, method="binned")
+    res, pr = stream.reselect(jnp.asarray(b), k, prior=pr, method="binned")
+    assert np.asarray(res.value) == kth(b, k)
+    # and re-selecting the SAME regime again is one sweep
+    res2, _ = stream.reselect(jnp.asarray(b), k, prior=pr, method="binned")
+    assert np.asarray(res2.value) == kth(b, k)
+    assert int(res2.iters) <= 1
+
+
+# ---------------------------------------------------------------------------
+# prior normalization
+# ---------------------------------------------------------------------------
+
+
+def test_as_prior_forms():
+    x = jnp.asarray(_data(25))
+    k = N // 2
+    cold = selection.order_statistic(x, k, method="binned")
+    # SelectResult, Prior, bare scalar: all accepted, all bit-exact
+    for pr in (cold, selection.as_prior(cold), cold.value, 0.0):
+        warm = selection.order_statistic(x, k, method="binned", prior=pr)
+        assert np.asarray(warm.value) == np.asarray(cold.value)
+    assert selection.as_prior(None) is None
+    p = selection.as_prior(1.5)
+    assert isinstance(p, selection.Prior)
+    assert float(p.y_lo) == float(p.y_hi) == 1.5
+
+
+def test_prior_is_traced_not_static():
+    """Same jitted callsite must serve different prior VALUES without
+    retracing (prior is a traced pytree leaf set, not a static arg)."""
+    x = jnp.asarray(_data(26))
+    k = N // 2
+    cold = selection.order_statistic(x, k, method="binned")
+    shifted = selection.Prior(*(f + 1.0 for f in selection.as_prior(cold)))
+    w1 = selection.order_statistic(x, k, method="binned", prior=cold)
+    w2 = selection.order_statistic(x, k, method="binned", prior=shifted)
+    assert np.asarray(w1.value) == np.asarray(w2.value)
